@@ -1,0 +1,20 @@
+"""Shared benchmark helpers: CSV emit + paper constants."""
+import time
+
+CPU_HZ = 2.3e9  # paper §4.1: 2.3 GHz
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def cycles_to_ms(cycles: int) -> float:
+    return cycles / CPU_HZ * 1e3
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6

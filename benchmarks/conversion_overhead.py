@@ -1,0 +1,18 @@
+"""Paper §3.2: RWMA<->BWMA conversion cost vs whole-model run-time (~0.1%)."""
+from benchmarks.common import emit
+from repro.core import memmodel as mm
+
+
+def run(scale: float = 1.0):
+    wl = mm.WorkloadConfig() if scale >= 1.0 else mm.WorkloadConfig(
+        seq=int(512 * scale), d_ff=int(3072 * scale)
+    )
+    print("# conversion overhead (12-layer model)")
+    for accel in mm.PAPER_ACCELERATORS:
+        frac = mm.conversion_overhead_fraction(wl, accel, n_layers=12)
+        emit(f"conversion/{accel.name}", 0.0,
+             f"{frac*100:.3f}% (paper: ~0.1%)")
+
+
+if __name__ == "__main__":
+    run()

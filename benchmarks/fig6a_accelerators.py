@@ -1,0 +1,23 @@
+"""Paper Fig. 6a: BERT-base layer execution time, RWMA vs BWMA, per
+accelerator (SA8x8, SA16x16, SIMD16), single core."""
+from benchmarks.common import cycles_to_ms, emit
+from repro.core import memmodel as mm
+
+
+def run(scale: float = 1.0):
+    wl = mm.WorkloadConfig() if scale >= 1.0 else mm.WorkloadConfig(
+        seq=int(512 * scale), d_ff=int(3072 * scale)
+    )
+    print("# fig6a: BERT layer exec time (ms @2.3GHz), single core")
+    for accel in mm.PAPER_ACCELERATORS:
+        r = mm.simulate_layer(wl, accel, "rwma")["total"].cycles
+        b = mm.simulate_layer(wl, accel, "bwma")["total"].cycles
+        emit(f"fig6a/{accel.name}/rwma_ms", cycles_to_ms(r) * 1e3,
+             f"cycles={r}")
+        emit(f"fig6a/{accel.name}/bwma_ms", cycles_to_ms(b) * 1e3,
+             f"cycles={b}")
+        emit(f"fig6a/{accel.name}/speedup", 0.0, f"{r / b:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

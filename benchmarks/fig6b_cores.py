@@ -1,0 +1,29 @@
+"""Paper Fig. 6b: multi-core scaling (1/2/4 cores, SA16x16 per core)."""
+from benchmarks.common import cycles_to_ms, emit
+from repro.core import memmodel as mm
+
+
+def run(scale: float = 1.0):
+    wl = mm.WorkloadConfig() if scale >= 1.0 else mm.WorkloadConfig(
+        seq=int(512 * scale), d_ff=int(3072 * scale)
+    )
+    accel = mm.AccelSpec.sa(16)
+    print("# fig6b: multi-core (SA16x16/core), ms @2.3GHz")
+    results = {}
+    for cores in (1, 2, 4):
+        r = mm.simulate_layer(wl, accel, "rwma", cores)["total"].cycles
+        b = mm.simulate_layer(wl, accel, "bwma", cores)["total"].cycles
+        results[cores] = (r, b)
+        emit(f"fig6b/cores{cores}/rwma_ms", cycles_to_ms(r) * 1e3, "")
+        emit(f"fig6b/cores{cores}/bwma_ms", cycles_to_ms(b) * 1e3,
+             f"speedup={r/b:.2f}x")
+    # paper headline: single-core BWMA beats dual-core RWMA
+    emit(
+        "fig6b/bwma1core_vs_rwma2core", 0.0,
+        f"{'PASS' if results[1][1] < results[2][0] else 'FAIL'} "
+        f"({cycles_to_ms(results[1][1]):.0f}ms vs {cycles_to_ms(results[2][0]):.0f}ms)",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 8: memory accesses / misses per hierarchy level."""
+from benchmarks.common import emit
+from repro.core import memmodel as mm
+
+
+def run(scale: float = 1.0):
+    wl = mm.WorkloadConfig() if scale >= 1.0 else mm.WorkloadConfig(
+        seq=int(512 * scale), d_ff=int(3072 * scale)
+    )
+    accel = mm.AccelSpec.sa(16)
+    print("# fig8: memory hierarchy accesses (SA16x16, single core)")
+    stats = {}
+    for layout in ("rwma", "bwma"):
+        t = mm.simulate_layer(wl, accel, layout)["total"]
+        stats[layout] = t
+        emit(f"fig8/{layout}/l1_accesses", 0.0, str(t.l1_accesses))
+        emit(f"fig8/{layout}/l1_misses", 0.0, str(t.l1_misses))
+        emit(f"fig8/{layout}/l2_accesses", 0.0, str(t.l2_accesses))
+        emit(f"fig8/{layout}/l2_misses", 0.0, str(t.l2_misses))
+        emit(f"fig8/{layout}/dram_accesses", 0.0, str(t.dram_accesses))
+    r, b = stats["rwma"], stats["bwma"]
+    emit("fig8/l1_miss_ratio_rwma_over_bwma", 0.0,
+         f"{r.l1_misses/max(b.l1_misses,1):.1f}x (paper: 12.3x)")
+    emit("fig8/l2_access_ratio", 0.0,
+         f"{r.l2_accesses/max(b.l2_accesses,1):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

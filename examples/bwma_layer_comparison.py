@@ -1,0 +1,37 @@
+"""Reproduce the paper's headline figures on the simulated SoC, end to end.
+
+Prints the Fig. 6a / 6b / 7 / 8 quantities for the full BERT-base layer —
+the numbers EXPERIMENTS.md cites.  (~2-3 min: the SA8x8 trace is large.)
+
+Run:  PYTHONPATH=src:. python examples/bwma_layer_comparison.py [--fast]
+"""
+import argparse
+
+from repro.core import memmodel as mm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced workload (seconds instead of minutes)")
+    args = ap.parse_args()
+    wl = (mm.WorkloadConfig(seq=128, d_model=192, n_heads=3, d_head=64,
+                            d_ff=768)
+          if args.fast else mm.WorkloadConfig())
+    print(f"workload: BERT layer seq={wl.seq} d={wl.d_model} "
+          f"heads={wl.n_heads} ff={wl.d_ff}")
+    for accel in mm.PAPER_ACCELERATORS:
+        r = mm.simulate_layer(wl, accel, "rwma")["total"]
+        b = mm.simulate_layer(wl, accel, "bwma")["total"]
+        print(f"{accel.name:8s}  RWMA {r.cycles/2.3e6:8.1f} ms   "
+              f"BWMA {b.cycles/2.3e6:8.1f} ms   speedup {r.cycles/b.cycles:.2f}x"
+              f"   L1-miss ratio {r.l1_misses/max(b.l1_misses,1):.1f}x")
+    accel = mm.AccelSpec.sa(16)
+    for cores in (1, 2, 4):
+        r = mm.simulate_layer(wl, accel, "rwma", cores)["total"].cycles
+        b = mm.simulate_layer(wl, accel, "bwma", cores)["total"].cycles
+        print(f"cores={cores}  RWMA {r/2.3e6:8.1f} ms  BWMA {b/2.3e6:8.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

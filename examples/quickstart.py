@@ -1,0 +1,49 @@
+"""Quickstart: the paper's technique end-to-end in 60 lines.
+
+1. Build a BERT-base-style encoder (the paper's case study).
+2. Run it in conventional row-major (RWMA) and block-wise (BWMA) layout —
+   numerically identical, layout-only change.
+3. Show the memory-hierarchy consequence on the paper's simulated SoC:
+   same math, ~2-3x fewer cycles under BWMA.
+
+Run:  PYTHONPATH=src:. python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder as enc
+from repro.core import memmodel as mm
+from repro.core.layout import BlockLayout, to_blockwise
+from repro.kernels.bwma_gemm import bwma_gemm
+
+# --- 1. a (reduced) paper model -------------------------------------------
+cfg = enc.EncoderConfig(seq_len=128, d_model=192, n_heads=3, d_head=64,
+                        d_ff=768, n_layers=2, block=16)
+params = enc.init_params(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (cfg.seq_len, cfg.d_model))
+
+# --- 2. run both memory arrangements --------------------------------------
+y_rwma = enc.encoder_rwma(params, x, cfg)
+y_bwma = enc.encoder_bwma(enc.block_params(params, cfg), x, cfg)
+print("max |BWMA - RWMA| =", float(jnp.abs(y_bwma - y_rwma).max()),
+      "(layout is purely a memory-system concern)")
+
+# --- 3. the Pallas kernel view (TPU target, interpret on CPU) -------------
+lo = BlockLayout(16, 16)
+a = jax.random.normal(jax.random.PRNGKey(2), (64, 96))
+b = jax.random.normal(jax.random.PRNGKey(3), (96, 48))
+out = bwma_gemm(to_blockwise(a, lo), to_blockwise(b, lo), interpret=True)
+print("bwma_gemm grid ran:", out.shape, "— each grid step fetched ONE "
+      "contiguous block from (simulated) HBM")
+
+# --- 4. why it is faster: the paper's measurement --------------------------
+wl = mm.WorkloadConfig(seq=cfg.seq_len, d_model=cfg.d_model,
+                       n_heads=cfg.n_heads, d_head=cfg.d_head, d_ff=cfg.d_ff)
+accel = mm.AccelSpec.sa(16)
+r = mm.simulate_layer(wl, accel, "rwma")["total"]
+bw_ = mm.simulate_layer(wl, accel, "bwma")["total"]
+print(f"simulated SoC (32KB L1 / 1MB L2, SA16x16): "
+      f"RWMA {r.cycles:,} cycles vs BWMA {bw_.cycles:,} cycles "
+      f"-> {r.cycles / bw_.cycles:.2f}x speedup")
+print(f"L1 misses: {r.l1_misses:,} -> {bw_.l1_misses:,} "
+      f"({r.l1_misses / max(bw_.l1_misses, 1):.1f}x fewer)")

@@ -1,0 +1,69 @@
+"""Assigned input shapes -> ShapeDtypeStruct stand-ins for the dry-run.
+
+Every (arch × shape) cell is described by ``input_specs(cfg, shape)``:
+no device allocation, weak-type-correct, shardable.  ``applicable`` encodes
+the assignment's skip rules (long_500k only for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as M
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """(runnable?, reason-if-not) for an (arch, shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (see DESIGN.md)"
+        )
+    return True, ""
+
+
+def _token_spec(b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _frontend_extras(cfg: ModelConfig, b: int, s: int) -> Dict:
+    out = {}
+    if cfg.frontend == "vision":
+        nv = min(cfg.n_frontend_tokens, s)
+        out["vis_embeds"] = jax.ShapeDtypeStruct((b, nv, cfg.d_model), cfg.dtype)
+        out["positions3"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    if cfg.frontend == "audio":
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree as ShapeDtypeStructs (eval_shape: zero allocation)."""
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Returns {kind, specs} where specs matches the step function's args."""
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _token_spec(b, s), "labels": _token_spec(b, s)}
+        batch.update(_frontend_extras(cfg, b, s))
+        return {"kind": "train", "batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _token_spec(b, s)}
+        batch.update(_frontend_extras(cfg, b, s))
+        return {"kind": "prefill", "batch": batch}
+    # decode: one new token against a cache of length s
+    return {
+        "kind": "decode",
+        "tokens": _token_spec(b, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": cache_specs(cfg, b, s),
+    }

@@ -1,0 +1,160 @@
+"""Block-wise (BWMA) operators, pure-jnp reference semantics.
+
+These implement every operator a transformer encoder needs *directly on the
+blocked layout* — the paper's key claim is that intermediates never need to be
+rearranged back to row-major between layers (§3.2).  The Pallas kernels in
+``repro.kernels`` are the accelerated versions of the GEMM-shaped ones; these
+functions double as their oracles.
+
+A :class:`Blocked` value carries the 4-D blocked data plus the logical
+(unpadded) shape so padded rows/columns can be masked in the reductions
+(softmax / layernorm) exactly as a real implementation must.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import BlockLayout, from_blockwise, to_blockwise
+
+
+@dataclasses.dataclass(frozen=True)
+class Blocked:
+    """A logically (m, n) matrix stored block-wise as (gm, gn, bm, bn)."""
+
+    data: jnp.ndarray  # (..., gm, gn, bm, bn)
+    shape: Tuple[int, int]  # logical (m, n)
+    layout: BlockLayout
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def unblock(self) -> jnp.ndarray:
+        return from_blockwise(self.data, self.layout, self.shape)
+
+
+def tree_register():  # pragma: no cover - import-time side effect
+    pass
+
+
+jax.tree_util.register_pytree_node(
+    Blocked,
+    lambda b: ((b.data,), (b.shape, b.layout)),
+    lambda aux, children: Blocked(children[0], aux[0], aux[1]),
+)
+
+
+def block(x: jnp.ndarray, layout: BlockLayout) -> Blocked:
+    return Blocked(to_blockwise(x, layout), (x.shape[-2], x.shape[-1]), layout)
+
+
+def _col_mask(b: Blocked) -> jnp.ndarray:
+    """(gn, 1, bn) mask of valid (unpadded) logical columns."""
+    gm, gn, bm, bn = b.data.shape[-4:]
+    col = jnp.arange(gn * bn).reshape(gn, 1, bn)
+    return col < b.shape[1]
+
+
+def _row_mask(b: Blocked) -> jnp.ndarray:
+    """(gm, bm, 1) mask of valid logical rows."""
+    gm, gn, bm, bn = b.data.shape[-4:]
+    row = jnp.arange(gm * bm).reshape(gm, bm, 1)
+    return row < b.shape[0]
+
+
+def bw_matmul(a: Blocked, b: Blocked, *, precision=None) -> Blocked:
+    """Blocked GEMM: every (i, j, k) step is one accelerator-block matmul.
+
+    K-padding is zeros so it contributes nothing to the accumulation.
+    """
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    out = jnp.einsum(
+        "...mkab,...knbc->...mnac", a.data, b.data, precision=precision
+    )
+    return Blocked(out, (a.shape[0], b.shape[1]), a.layout)
+
+
+def bw_add(a: Blocked, b: Blocked) -> Blocked:
+    return Blocked(a.data + b.data, a.shape, a.layout)
+
+
+def bw_bias(a: Blocked, bias_blocked: jnp.ndarray) -> Blocked:
+    """bias_blocked: (gn, bn) — a bias vector stored block-wise."""
+    gn, bn = bias_blocked.shape
+    return Blocked(a.data + bias_blocked[None, :, None, :], a.shape, a.layout)
+
+
+def bw_map(a: Blocked, fn: Callable[[jnp.ndarray], jnp.ndarray]) -> Blocked:
+    """Element-wise op (paper's Activation case: layout-neutral)."""
+    return Blocked(fn(a.data), a.shape, a.layout)
+
+
+def bw_scale(a: Blocked, s) -> Blocked:
+    return Blocked(a.data * s, a.shape, a.layout)
+
+
+def bw_transpose(a: Blocked) -> Blocked:
+    """Paper §3.2 Transpose: swap the block grid *and* each block's interior.
+
+    In BWMA this is two nested small transposes with good locality (Fig. 5b);
+    numerically it is exactly the logical transpose.
+    """
+    out = jnp.swapaxes(jnp.swapaxes(a.data, -4, -3), -2, -1)
+    return Blocked(out, (a.shape[1], a.shape[0]), a.layout)
+
+
+def bw_softmax(a: Blocked, *, where_extra=None) -> Blocked:
+    """Softmax over logical rows of a blocked matrix (paper §3.2 Softmax).
+
+    The reduction runs over axes (gn, bn) — the blocked image of one row —
+    with padded columns masked out.  Padded rows produce garbage that is
+    cropped at unblock time; we keep them finite.
+    """
+    mask = _col_mask(a)  # (gn, 1, bn)
+    if where_extra is not None:
+        mask = jnp.logical_and(mask, where_extra)
+    neg = jnp.finfo(a.dtype).min
+    x = jnp.where(mask, a.data, neg)
+    m = jnp.max(x, axis=(-3, -1), keepdims=True)
+    e = jnp.exp(x - m)
+    e = jnp.where(mask, e, 0.0)
+    s = jnp.sum(e, axis=(-3, -1), keepdims=True)
+    return Blocked(e / jnp.maximum(s, 1e-30), a.shape, a.layout)
+
+
+def bw_layernorm(
+    a: Blocked,
+    gamma_blocked: jnp.ndarray,
+    beta_blocked: jnp.ndarray,
+    *,
+    eps: float = 1e-5,
+) -> Blocked:
+    """Row-wise LayerNorm on the blocked layout (paper §3.2 Normalization).
+
+    gamma/beta are stored block-wise as (gn, bn) so the whole op never leaves
+    BWMA order.
+    """
+    mask = _col_mask(a)
+    n = a.shape[1]
+    x = jnp.where(mask, a.data, 0.0)
+    mean = jnp.sum(x, axis=(-3, -1), keepdims=True) / n
+    var = jnp.sum(jnp.where(mask, (a.data - mean) ** 2, 0.0), axis=(-3, -1), keepdims=True) / n
+    y = (a.data - mean) * jax.lax.rsqrt(var + eps)
+    y = y * gamma_blocked[None, :, None, :] + beta_blocked[None, :, None, :]
+    y = jnp.where(mask, y, 0.0)
+    return Blocked(y, a.shape, a.layout)
+
+
+def block_vector(v: jnp.ndarray, layout: BlockLayout) -> jnp.ndarray:
+    """Store a length-N vector block-wise as (gn, bn) (zero padded)."""
+    n = v.shape[-1]
+    gn = -(-n // layout.bn)
+    pad = gn * layout.bn - n
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    return v.reshape(*v.shape[:-1], gn, layout.bn)

@@ -1,0 +1,100 @@
+"""Block-wise memory arrangement (BWMA) layouts.
+
+The paper's core object: a 2-D matrix stored in linear memory as a sequence of
+accelerator-kernel-sized blocks instead of rows.  On TPU we realize this as a
+4-D array ``(M/bm, N/bn, bm, bn)`` whose trailing two dims are one accelerator
+block — any ``BlockSpec`` that picks ``(1, 1, bm, bn)`` then maps to a single
+*contiguous* HBM region per grid step (the TPU analogue of the paper's
+sequential DRAM bursts).
+
+``RWMA`` is the conventional row-major 2-D array the paper compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class LayoutPolicy(enum.Enum):
+    """Which arrangement a model/layer uses for its matrices."""
+
+    RWMA = "rwma"  # conventional row-major
+    BWMA = "bwma"  # paper's block-wise arrangement (ours)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """A block-wise layout governed by the accelerator kernel size.
+
+    ``bm`` × ``bn`` is the accelerator block (paper: 8/16 PEs; TPU: multiples
+    of (8, 128), default 128×128 to match the MXU).
+    """
+
+    bm: int = 128
+    bn: int = 128
+
+    def __post_init__(self):
+        if self.bm <= 0 or self.bn <= 0:
+            raise ValueError(f"block dims must be positive, got {self}")
+
+    def padded_shape(self, shape: Tuple[int, int]) -> Tuple[int, int]:
+        m, n = shape
+        return (ceil_to(m, self.bm), ceil_to(n, self.bn))
+
+    def grid(self, shape: Tuple[int, int]) -> Tuple[int, int]:
+        pm, pn = self.padded_shape(shape)
+        return (pm // self.bm, pn // self.bn)
+
+    def blocked_shape(self, shape: Tuple[int, int]) -> Tuple[int, int, int, int]:
+        gm, gn = self.grid(shape)
+        return (gm, gn, self.bm, self.bn)
+
+
+def ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def pad2d(x: jnp.ndarray, layout: BlockLayout) -> jnp.ndarray:
+    """Zero-pad the trailing two dims of ``x`` to block multiples."""
+    m, n = x.shape[-2], x.shape[-1]
+    pm, pn = layout.padded_shape((m, n))
+    if (pm, pn) == (m, n):
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, pm - m), (0, pn - n)]
+    return jnp.pad(x, pad)
+
+
+def to_blockwise(x: jnp.ndarray, layout: BlockLayout) -> jnp.ndarray:
+    """RWMA -> BWMA: ``(..., M, N) -> (..., M/bm, N/bn, bm, bn)``.
+
+    The output's memory order (row-major over the 4-D shape) is exactly the
+    paper's Fig. 4d: block after block, each block contiguous.
+    """
+    x = pad2d(x, layout)
+    *lead, m, n = x.shape
+    gm, gn = m // layout.bm, n // layout.bn
+    x = x.reshape(*lead, gm, layout.bm, gn, layout.bn)
+    # (..., gm, bm, gn, bn) -> (..., gm, gn, bm, bn)
+    return jnp.swapaxes(x, -3, -2)
+
+
+def from_blockwise(
+    xb: jnp.ndarray, layout: BlockLayout, shape: Tuple[int, int]
+) -> jnp.ndarray:
+    """BWMA -> RWMA, cropping any block padding back to ``shape``."""
+    *lead, gm, gn, bm, bn = xb.shape
+    if (bm, bn) != (layout.bm, layout.bn):
+        raise ValueError(f"array blocks {(bm, bn)} != layout {(layout.bm, layout.bn)}")
+    x = jnp.swapaxes(xb, -3, -2).reshape(*lead, gm * bm, gn * bn)
+    m, n = shape
+    return x[..., :m, :n]
+
+
+def blockwise_1d_view(xb: np.ndarray) -> np.ndarray:
+    """The literal 1-D array as stored in memory (paper Fig. 4d). numpy-only,
+    used by the memory model and tests to reason about addresses."""
+    return np.ascontiguousarray(xb).reshape(-1)

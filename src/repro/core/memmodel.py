@@ -1,0 +1,470 @@
+"""Trace-driven memory-hierarchy model reproducing the paper's evaluation.
+
+The paper evaluates BWMA vs RWMA on a gem5-X simulated SoC (32 KB L1-D per
+core, 1 MB shared L2, DRAM; CPU @ 2.3 GHz) with tightly-coupled accelerators
+(SA8x8 / SA16x16 / SIMD16).  gem5 is not available here, so this module
+rebuilds the *measurement instrument*: it generates the exact cache-line
+access trace that tiled GEMM + the non-GEMM operators produce under each
+memory arrangement, runs it through a cache simulator, and converts
+hits/misses into cycles.
+
+Everything is vectorized numpy — a full BERT-base encoder layer (the paper's
+workload, 512x768, 12 heads) simulates in seconds.
+
+Modeling choices (documented deviations from gem5):
+  * caches are direct-mapped (vectorizable closed form); associativity shifts
+    absolute miss counts but not the RWMA/BWMA ordering, which is driven by
+    spatial locality.
+  * a sequential next-line prefetcher is modeled as: an L1 miss whose line is
+    the successor of the immediately preceding access is serviced at hit
+    latency (the paper's §1 'contiguous block can simultaneously be
+    pre-fetched').
+  * DRAM sequential bursts: an L2-miss line contiguous with the previous
+    L2-miss line pays the burst beat, not the full row-activate latency.
+  * per-tile address-generation overhead: RWMA needs per-row-segment index
+    arithmetic (the paper's Fig. 8 I-cache observation); BWMA needs one per
+    block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+LINE = 64  # bytes per cache line
+
+
+# --------------------------------------------------------------------------
+# Hardware descriptions (paper §4.1)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    l1_bytes: int = 32 * 1024          # 32 KB L1-D per core
+    l2_bytes: int = 1024 * 1024        # 1 MB shared L2
+    lat_l1: int = 2                    # cycles (paper §4.3)
+    lat_l2: int = 20                   # cycles (paper §4.3)
+    lat_dram: int = 120                # row miss
+    lat_dram_burst: int = 30           # sequential beat
+    prefetch: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelSpec:
+    """An accelerator with kernel size T (paper: #PEs per row / SIMD lanes)."""
+
+    name: str
+    kernel: int                  # T — this is what BWMA blocks align to
+    cycles_per_tile: int         # cycles for one TxTxT tile-GEMM step
+    esize: int = 1               # bytes/element (TiC-SAT is int8)
+
+    @staticmethod
+    def sa(kernel: int, esize: int = 1) -> "AccelSpec":
+        # weight-stationary systolic array: stream T rows + pipeline fill
+        return AccelSpec(f"SA{kernel}x{kernel}", kernel, 3 * kernel, esize)
+
+    @staticmethod
+    def simd(kernel: int = 16, esize: int = 1) -> "AccelSpec":
+        # T lanes x 1 MAC/cycle -> T^3 / T cycles per tile
+        return AccelSpec(f"SIMD{kernel}", kernel, kernel * kernel, esize)
+
+
+PAPER_ACCELERATORS = (AccelSpec.sa(8), AccelSpec.sa(16), AccelSpec.simd(16))
+
+
+# --------------------------------------------------------------------------
+# Trace generation: cache-line addresses in program order
+# --------------------------------------------------------------------------
+
+def _seg_lines(addr: np.ndarray, seg_bytes: int) -> np.ndarray:
+    """Expand byte addresses of aligned segments into line numbers.
+
+    addr: (...,) start byte addresses; returns (..., lps) line indices.
+    Segments are assumed not to straddle lines unless seg_bytes >= LINE
+    (true for all paper configs: T*esize in {8,16,32,64,...}).
+    """
+    lps = max(1, seg_bytes // LINE)
+    return addr[..., None] // LINE + np.arange(lps, dtype=np.int64)
+
+
+def gemm_trace(
+    M: int, K: int, N: int, T: int, layout: str, esize: int,
+    base_a: int, base_b: int, base_c: int,
+) -> Tuple[np.ndarray, Dict[str, int]]:
+    """Line trace of an output-stationary tiled GEMM A(MxK) @ B(KxN) -> C.
+
+    Loop order (paper Fig. 3): for i, for j, for k: load A[i,k], B[k,j];
+    after the k loop, write C[i,j].  Returns the interleaved line trace and
+    per-matrix access/segment counts (for the address-generation overhead).
+    """
+    I, J, Kt = M // T, N // T, K // T
+    ii = np.arange(I, dtype=np.int64)[:, None, None, None]
+    jj = np.arange(J, dtype=np.int64)[None, :, None, None]
+    kk = np.arange(Kt, dtype=np.int64)[None, None, :, None]
+    rr = np.arange(T, dtype=np.int64)[None, None, None, :]
+    zero = np.zeros((1, 1, 1, 1), dtype=np.int64)
+
+    if layout == "rwma":
+        # A tile (i,k): T row segments at stride K*esize
+        a_addr = base_a + ((ii * T + rr) * K + kk * T) * esize
+        b_addr = base_b + ((kk * T + rr) * N + jj * T) * esize
+        a_lines = _seg_lines(np.broadcast_to(a_addr, (I, J, Kt, T)), T * esize)
+        b_lines = _seg_lines(np.broadcast_to(b_addr, (I, J, Kt, T)), T * esize)
+        a_lines = a_lines.reshape(I, J, Kt, -1)
+        b_lines = b_lines.reshape(I, J, Kt, -1)
+        c_addr = base_c + ((ii * T + rr) * N + jj * T) * esize
+        c_lines = _seg_lines(
+            np.broadcast_to(c_addr[:, :, 0, :], (I, J, T)), T * esize
+        ).reshape(I, J, -1)
+        segs_per_tile = T
+    elif layout == "bwma":
+        # A tile (i,k): one contiguous T*T block (paper Fig. 4d)
+        a_addr = (base_a + (ii * Kt + kk) * (T * T) * esize) + zero
+        b_addr = (base_b + (kk * J + jj) * (T * T) * esize) + zero
+        a_lines = _seg_lines(
+            np.broadcast_to(a_addr[..., 0], (I, J, Kt)), T * T * esize
+        ).reshape(I, J, Kt, -1)
+        b_lines = _seg_lines(
+            np.broadcast_to(b_addr[..., 0], (I, J, Kt)), T * T * esize
+        ).reshape(I, J, Kt, -1)
+        c_addr = (base_c + (ii * J + jj) * (T * T) * esize) + zero
+        c_lines = _seg_lines(
+            np.broadcast_to(c_addr[:, :, 0, 0], (I, J)), T * T * esize
+        ).reshape(I, J, -1)
+        segs_per_tile = 1
+    else:
+        raise ValueError(layout)
+
+    # interleave per (i,j,k): A lines then B lines; append C write per (i,j)
+    step = np.concatenate([a_lines, b_lines], axis=-1)  # (I,J,Kt,L)
+    per_ij = step.reshape(I, J, -1)
+    per_ij = np.concatenate([per_ij, c_lines], axis=-1)
+    trace = per_ij.reshape(-1)
+    meta = {
+        "tiles": I * J * Kt,
+        "addr_segments": (2 * I * J * Kt + I * J) * segs_per_tile,
+        "flops": 2 * M * K * N,
+    }
+    return trace, meta
+
+
+def rowwise_trace(
+    M: int, N: int, T: int, layout: str, esize: int, base: int, passes: int = 1
+) -> np.ndarray:
+    """Softmax / LayerNorm access pattern (paper Fig. 5a): read each logical
+    row, write it back.  ``passes`` models multi-pass ops (softmax: max, exp,
+    normalize -> effectively ~2 read passes + 1 write)."""
+    rows = np.arange(M, dtype=np.int64)[:, None]
+    if layout == "rwma":
+        addr = base + (rows * N + np.arange(0, N, max(1, LINE // esize))) * esize
+        lines = addr // LINE
+    else:
+        jb = np.arange(N // T, dtype=np.int64)[None, :]
+        blk = (rows // T) * (N // T) + jb
+        addr = base + (blk * T * T + (rows % T) * T) * esize
+        lines = _seg_lines(addr, T * esize).reshape(M, -1)
+    one_pass = lines.reshape(-1)
+    return np.concatenate([one_pass] * (passes + 1))  # reads + write-back
+
+
+def transpose_trace(
+    M: int, N: int, T: int, layout: str, esize: int, base_in: int, base_out: int
+) -> np.ndarray:
+    """Transpose (paper Fig. 5b): gather input column-wise, write sequential."""
+    cols = np.arange(N, dtype=np.int64)[:, None]
+    rows = np.arange(M, dtype=np.int64)[None, :]
+    if layout == "rwma":
+        read = (base_in + (rows * N + cols) * esize) // LINE  # (N, M) one line/elt
+    else:
+        ib = np.arange(M // T, dtype=np.int64)[None, :]
+        blk = ib * (N // T) + cols // T
+        addr = base_in + (blk * T * T + cols % T) * esize  # column within block
+        read = _seg_lines(addr, T * T * esize).reshape(N, -1)
+    write = rowwise_trace(N, M, T, layout, esize, base_out, passes=0)
+    return np.concatenate([read.reshape(-1), write])
+
+
+# --------------------------------------------------------------------------
+# Cache simulation (vectorized direct-mapped + sequential prefetch)
+# --------------------------------------------------------------------------
+
+def _dm_miss(lines: np.ndarray, cache_bytes: int) -> np.ndarray:
+    """Direct-mapped miss vector in O(n log n), fully vectorized."""
+    if len(lines) == 0:
+        return np.zeros(0, dtype=bool)
+    nsets = cache_bytes // LINE
+    sets = lines % nsets
+    tags = lines // nsets
+    t = np.arange(len(lines))
+    order = np.lexsort((t, sets))
+    s_sorted, tag_sorted = sets[order], tags[order]
+    same_set = np.zeros(len(lines), dtype=bool)
+    same_set[1:] = s_sorted[1:] == s_sorted[:-1]
+    same_tag = np.zeros(len(lines), dtype=bool)
+    same_tag[1:] = tag_sorted[1:] == tag_sorted[:-1]
+    miss_sorted = ~(same_set & same_tag)
+    miss = np.empty(len(lines), dtype=bool)
+    miss[order] = miss_sorted
+    return miss
+
+
+def _sequential(lines: np.ndarray) -> np.ndarray:
+    """True where the access continues the previous line (prefetchable)."""
+    seq = np.zeros(len(lines), dtype=bool)
+    if len(lines) > 1:
+        d = lines[1:] - lines[:-1]
+        seq[1:] = (d == 1) | (d == 0)
+    return seq
+
+
+@dataclasses.dataclass
+class MemStats:
+    l1_accesses: int = 0
+    l1_misses: int = 0
+    l2_accesses: int = 0
+    l2_misses: int = 0
+    dram_accesses: int = 0
+    mem_cycles: int = 0
+    compute_cycles: int = 0
+    addr_cycles: int = 0
+
+    @property
+    def cycles(self) -> int:
+        # accelerator compute overlaps poorly with strided fetches in the
+        # tightly-coupled design: total = memory + compute + address gen.
+        return self.mem_cycles + self.compute_cycles + self.addr_cycles
+
+    def add(self, o: "MemStats") -> "MemStats":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+        return self
+
+
+def simulate_trace(lines: np.ndarray, cache: CacheConfig) -> MemStats:
+    st = MemStats()
+    st.l1_accesses = len(lines)
+    l1_miss = _dm_miss(lines, cache.l1_bytes)
+    if cache.prefetch:
+        covered = _sequential(lines) & l1_miss
+        demand_miss = l1_miss & ~covered
+    else:
+        covered = np.zeros_like(l1_miss)
+        demand_miss = l1_miss
+    st.l1_misses = int(demand_miss.sum())
+    # L2 sees demand misses and prefetch fills
+    l2_stream = lines[l1_miss]
+    st.l2_accesses = len(l2_stream)
+    l2_miss = _dm_miss(l2_stream, cache.l2_bytes)
+    st.l2_misses = int(l2_miss.sum())
+    dram_lines = l2_stream[l2_miss]
+    st.dram_accesses = len(dram_lines)
+    burst = _sequential(dram_lines)
+    dram_cycles = int(
+        (~burst).sum() * cache.lat_dram + burst.sum() * cache.lat_dram_burst
+    )
+    # prefetched lines are fetched ahead -> hit latency at use time; demand
+    # misses pay L2 or DRAM latency.
+    demand_l2 = lines[demand_miss]
+    demand_l2_miss = _dm_miss(np.concatenate([l2_stream]), cache.l2_bytes)  # noqa
+    # approximate: fraction of demand misses that also miss L2
+    frac_dram = st.l2_misses / max(st.l2_accesses, 1)
+    n_demand_dram = int(round(st.l1_misses * frac_dram))
+    st.mem_cycles = (
+        (st.l1_accesses - st.l1_misses) * cache.lat_l1
+        + (st.l1_misses - n_demand_dram) * cache.lat_l2
+        + dram_cycles
+    )
+    return st
+
+
+# --------------------------------------------------------------------------
+# BERT encoder-layer workload (paper §4.1)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    seq: int = 512
+    d_model: int = 768
+    n_heads: int = 12
+    d_head: int = 64
+    d_ff: int = 3072
+
+
+def _bases(n: int, stride: int = 1 << 22) -> List[int]:
+    """Distinct, page-aligned base addresses for each tensor."""
+    return [i * stride for i in range(n)]
+
+
+def bert_layer_components(
+    wl: WorkloadConfig, accel: AccelSpec, layout: str
+) -> List[Tuple[str, np.ndarray, Dict[str, int]]]:
+    """(name, trace, meta) for every component of one encoder layer."""
+    T, es = accel.kernel, accel.esize
+    S, D, H, Dh, F = wl.seq, wl.d_model, wl.n_heads, wl.d_head, wl.d_ff
+    out: List[Tuple[str, np.ndarray, Dict[str, int]]] = []
+    b = iter(_bases(64))
+
+    def gemm(name, M, K, N, reps=1):
+        tr, meta = gemm_trace(M, K, N, T, layout, es, next(b), next(b), next(b))
+        if reps > 1:
+            tr = np.concatenate([tr] * reps)
+            meta = {k: v * reps for k, v in meta.items()}
+        out.append((name, tr, meta))
+
+    # per paper Fig. 1b / Fig. 7 components (all heads aggregated):
+    gemm("qkv_gemm", S, D, Dh, reps=3 * H)
+    out.append((
+        "transpose",
+        np.concatenate([
+            transpose_trace(S, Dh, T, layout, es, next(b), next(b))
+            for _ in range(H)
+        ]),
+        {"tiles": 0, "addr_segments": H * S, "flops": 0,
+         "cpu_cycles": CPU_CYC_TRANSPOSE * H * S * Dh},
+    ))
+    gemm("qk_gemm", S, Dh, S, reps=H)
+    out.append((
+        "softmax",
+        np.concatenate([
+            rowwise_trace(S, S, T, layout, es, next(b), passes=2) for _ in range(H)
+        ]),
+        {"tiles": 0, "addr_segments": H * S, "flops": 5 * H * S * S,
+         "cpu_cycles": CPU_CYC_SOFTMAX * H * S * S},
+    ))
+    gemm("av_gemm", S, S, Dh, reps=H)
+    gemm("proj_gemm", S, H * Dh, D)
+    out.append((
+        "addnorm1",
+        rowwise_trace(S, D, T, layout, es, next(b), passes=2),
+        {"tiles": 0, "addr_segments": S, "flops": 8 * S * D,
+         "cpu_cycles": CPU_CYC_NORM * S * D},
+    ))
+    gemm("ffn1_gemm", S, D, F)  # activation fused at write-back (paper §3.2)
+    gemm("ffn2_gemm", S, F, D)
+    out.append((
+        "addnorm2",
+        rowwise_trace(S, D, T, layout, es, next(b), passes=2),
+        {"tiles": 0, "addr_segments": S, "flops": 8 * S * D,
+         "cpu_cycles": CPU_CYC_NORM * S * D},
+    ))
+    return out
+
+
+# scalar-CPU cycles per element for non-GEMM ops (exp / rsqrt are not
+# accelerated in TiC-SAT; they run on the ARM core).  Calibrated so the
+# BWMA non-GEMM share lands near the paper's 13.5 % (Fig. 7b).
+CPU_CYC_SOFTMAX = 7
+CPU_CYC_NORM = 6
+CPU_CYC_TRANSPOSE = 1
+
+
+ADDR_CYCLES_PER_SEGMENT = 4  # index arithmetic per fetched segment (RWMA pays
+                             # this per row-segment, BWMA once per block)
+
+
+def simulate_component(
+    trace: np.ndarray, meta: Dict[str, int], accel: AccelSpec, cache: CacheConfig
+) -> MemStats:
+    st = simulate_trace(trace, cache)
+    st.compute_cycles = (
+        meta["tiles"] * accel.cycles_per_tile + meta.get("cpu_cycles", 0)
+    )
+    st.addr_cycles = meta["addr_segments"] * ADDR_CYCLES_PER_SEGMENT
+    return st
+
+
+def _interleave(arrays: Sequence[np.ndarray]) -> np.ndarray:
+    """Proportional shuffle-merge of per-core streams (shared-L2 contention)."""
+    arrays = [a for a in arrays if len(a)]
+    if not arrays:
+        return np.zeros(0, dtype=np.int64)
+    pos = np.concatenate(
+        [np.arange(len(a), dtype=np.float64) / max(len(a), 1) for a in arrays]
+    )
+    vals = np.concatenate(arrays)
+    return vals[np.argsort(pos, kind="stable")]
+
+
+def simulate_layer(
+    wl: WorkloadConfig,
+    accel: AccelSpec,
+    layout: str,
+    cores: int = 1,
+    cache: CacheConfig = CacheConfig(),
+) -> Dict[str, MemStats]:
+    """Simulate one encoder layer; returns per-component and 'total' stats.
+
+    Multi-core: each component's outer loop is split across ``cores``; each
+    core has a private L1, the L2 stream is the interleaved per-core miss
+    streams (shared 1 MB L2), and wall-cycles divide the parallel work.
+    """
+    results: Dict[str, MemStats] = {}
+    total = MemStats()
+    for name, trace, meta in bert_layer_components(wl, accel, layout):
+        if cores == 1:
+            st = simulate_component(trace, meta, accel, cache)
+        else:
+            chunks = np.array_split(trace, cores)
+            per_core = []
+            miss_streams = []
+            for ch in chunks:
+                l1_miss = _dm_miss(ch, cache.l1_bytes)
+                if cache.prefetch:
+                    covered = _sequential(ch) & l1_miss
+                    demand = l1_miss & ~covered
+                else:
+                    demand = l1_miss
+                per_core.append((len(ch), int(demand.sum()), int(l1_miss.sum())))
+                miss_streams.append(ch[l1_miss])
+            l2_stream = _interleave(miss_streams)
+            l2_miss = _dm_miss(l2_stream, cache.l2_bytes)
+            dram_lines = l2_stream[l2_miss]
+            burst = _sequential(dram_lines)
+            st = MemStats()
+            st.l1_accesses = sum(c[0] for c in per_core)
+            st.l1_misses = sum(c[1] for c in per_core)
+            st.l2_accesses = len(l2_stream)
+            st.l2_misses = int(l2_miss.sum())
+            st.dram_accesses = len(dram_lines)
+            frac_dram = st.l2_misses / max(st.l2_accesses, 1)
+            n_demand_dram = int(round(st.l1_misses * frac_dram))
+            dram_cycles = int(
+                (~burst).sum() * cache.lat_dram + burst.sum() * cache.lat_dram_burst
+            )
+            # wall clock: parallel across cores
+            st.mem_cycles = (
+                (st.l1_accesses - st.l1_misses) * cache.lat_l1
+                + (st.l1_misses - n_demand_dram) * cache.lat_l2
+                + dram_cycles
+            ) // cores
+            st.compute_cycles = (
+                meta["tiles"] * accel.cycles_per_tile + meta.get("cpu_cycles", 0)
+            ) // cores
+            st.addr_cycles = meta["addr_segments"] * ADDR_CYCLES_PER_SEGMENT // cores
+        results[name] = st
+        total.add(st)
+    results["total"] = total
+    return results
+
+
+GEMM_COMPONENTS = (
+    "qkv_gemm", "qk_gemm", "av_gemm", "proj_gemm", "ffn1_gemm", "ffn2_gemm",
+)
+NON_GEMM_COMPONENTS = ("transpose", "softmax", "addnorm1", "addnorm2")
+
+
+def speedup(wl: WorkloadConfig, accel: AccelSpec, cores: int = 1) -> float:
+    r = simulate_layer(wl, accel, "rwma", cores)["total"].cycles
+    bwma = simulate_layer(wl, accel, "bwma", cores)["total"].cycles
+    return r / bwma
+
+
+def conversion_overhead_fraction(wl: WorkloadConfig, accel: AccelSpec,
+                                 n_layers: int = 12) -> float:
+    """Paper §3.2: RWMA<->BWMA conversion cost vs whole-model run-time."""
+    # conversion = read + write of the SxD input and output matrices once
+    conv_lines = 2 * 2 * (wl.seq * wl.d_model * accel.esize) // LINE
+    conv_cycles = conv_lines * CacheConfig().lat_dram_burst
+    layer = simulate_layer(wl, accel, "bwma")["total"].cycles
+    return conv_cycles / (layer * n_layers + conv_cycles)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, TokenFileData, make_batch_sharded
+
+__all__ = ["SyntheticLMData", "TokenFileData", "make_batch_sharded"]

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    MeshAxes,
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    param_pspecs,
+)
+
+__all__ = [
+    "MeshAxes",
+    "batch_pspecs",
+    "cache_pspecs",
+    "opt_pspecs",
+    "param_pspecs",
+]

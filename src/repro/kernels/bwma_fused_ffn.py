@@ -1,0 +1,57 @@
+"""Blocked GEMM + bias + GELU fusion (paper §3.2 Activation).
+
+The paper notes the activation is element-wise and therefore fused into the
+feed-forward GEMM 'immediately prior to saving the computed values back into
+the memory', costing zero extra memory traffic.  This kernel realizes that on
+TPU: at the final reduction step (k == gk-1), the epilogue applies bias+GELU
+on the accumulator while it is still resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(a_ref, b_ref, bias_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] += jnp.dot(
+        a_ref[0, 0], b_ref[0, 0], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[0, 0] = jax.nn.gelu(o_ref[0, 0] + bias_ref[...].astype(o_ref.dtype))
+
+
+def bwma_fused_ffn(
+    a_blocked: jnp.ndarray,
+    w_blocked: jnp.ndarray,
+    bias_blocked: jnp.ndarray,
+    *,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """gelu((gm,gk,bm,bk) @ (gk,gn,bk,bn) + bias(gn,bn)) -> (gm,gn,bm,bn)."""
+    gm, gk, bm, bk = a_blocked.shape
+    _, gn, _, bn = w_blocked.shape
+    kernel = functools.partial(_ffn_kernel, n_k=gk)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j, k: (i, k, 0, 0)),
+            pl.BlockSpec((1, 1, bk, bn), lambda i, j, k: (k, j, 0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn), lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gm, gn, bm, bn), acc_dtype),
+        interpret=interpret,
+    )(a_blocked, w_blocked, bias_blocked)

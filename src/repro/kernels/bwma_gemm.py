@@ -1,0 +1,61 @@
+"""BWMA blocked GEMM — the paper's technique as a Pallas TPU kernel.
+
+Inputs are stored block-wise (4-D, trailing dims = one accelerator block), so
+the ``BlockSpec`` for every grid step selects ``(1, 1, bm, bk)`` — a single
+**contiguous** HBM region.  Pallas double-buffers the next grid step's DMA
+while the MXU computes the current block: contiguity makes that DMA one burst
+descriptor, which is exactly the paper's prefetch-alignment argument mapped to
+the TPU memory system.
+
+Contrast with :mod:`repro.kernels.rwma_gemm`, which implements the identical
+tiling over *row-major* operands: its per-step DMA gathers ``bm`` separate
+row segments (strided descriptor), the TPU analogue of the paper's RWMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j] on the MXU."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0, 0]  # (bm, bk) — fetched as one contiguous block
+    b = b_ref[0, 0]  # (bk, bn)
+    o_ref[0, 0] += jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+def bwma_gemm(
+    a_blocked: jnp.ndarray,
+    b_blocked: jnp.ndarray,
+    *,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(gm, gk, bm, bk) @ (gk, gn, bk, bn) -> (gm, gn, bm, bn), blocked."""
+    gm, gk, bm, bk = a_blocked.shape
+    gk2, gn, bk2, bn = b_blocked.shape
+    if (gk, bk) != (gk2, bk2):
+        raise ValueError(f"inner blocks mismatch: {a_blocked.shape} @ {b_blocked.shape}")
+    kernel = functools.partial(_gemm_kernel, n_k=gk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            # contiguous: one block per step (BWMA — paper Fig. 4d)
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j, k: (i, k, 0, 0)),
+            pl.BlockSpec((1, 1, bk, bn), lambda i, j, k: (k, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn), lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gm, gn, bm, bn), acc_dtype),
+        interpret=interpret,
+    )(a_blocked, b_blocked)
+    return out

@@ -1,0 +1,54 @@
+"""Blocked LayerNorm — the paper's §3.2 Normalization on the BWMA layout.
+
+gamma/beta are stored block-wise as (gn, bn): the whole residual+norm path
+never leaves block order, so no rearrangement is needed between layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, n_logical: int, bn: int, eps: float):
+    x = x_ref[0].astype(jnp.float32)  # (gn, bm, bn)
+    gn, bm, _ = x.shape
+    col = (
+        jax.lax.broadcasted_iota(jnp.int32, (gn, bm, bn), 0) * bn
+        + jax.lax.broadcasted_iota(jnp.int32, (gn, bm, bn), 2)
+    )
+    mask = col < n_logical
+    xz = jnp.where(mask, x, 0.0)
+    mean = jnp.sum(xz, axis=(0, 2), keepdims=True) / n_logical
+    var = jnp.sum(jnp.where(mask, (x - mean) ** 2, 0.0), axis=(0, 2), keepdims=True)
+    var = var / n_logical
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...][:, None, :] + b_ref[...][:, None, :]
+    o_ref[0] = jnp.where(mask, y, 0.0).astype(o_ref.dtype)
+
+
+def bwma_layernorm(
+    x_blocked: jnp.ndarray,
+    gamma_blocked: jnp.ndarray,
+    beta_blocked: jnp.ndarray,
+    n_logical: int,
+    *,
+    eps: float = 1e-5,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    gm, gn, bm, bn = x_blocked.shape
+    kernel = functools.partial(_ln_kernel, n_logical=n_logical, bn=bn, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((1, gn, bm, bn), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((gn, bn), lambda i: (0, 0)),
+            pl.BlockSpec((gn, bn), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gn, bm, bn), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x_blocked.shape, x_blocked.dtype),
+        interpret=interpret,
+    )(x_blocked, gamma_blocked, beta_blocked)

@@ -1,0 +1,46 @@
+"""Blocked softmax — the paper's §3.2 Softmax, directly on the BWMA layout.
+
+One grid step processes one *block-row*: block shape ``(1, gn, bm, bn)``.
+The reduction over a logical row spans axes (gn, bn) of the block; padded
+columns (block-quantization of the logical width) are masked with the same
+index arithmetic the paper's Fig. 5a describes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref, *, n_logical: int, bn: int):
+    x = x_ref[0]  # (gn, bm, bn)
+    gn = x.shape[0]
+    col = (
+        jax.lax.broadcasted_iota(jnp.int32, (gn, x.shape[1], bn), 0) * bn
+        + jax.lax.broadcasted_iota(jnp.int32, (gn, x.shape[1], bn), 2)
+    )
+    mask = col < n_logical
+    neg = jnp.finfo(x.dtype).min
+    xm = jnp.where(mask, x, neg)
+    m = jnp.max(xm, axis=(0, 2), keepdims=True)
+    e = jnp.where(mask, jnp.exp(xm - m), 0.0)
+    s = jnp.sum(e, axis=(0, 2), keepdims=True)
+    o_ref[0] = (e / jnp.maximum(s, 1e-30)).astype(o_ref.dtype)
+
+
+def bwma_softmax(
+    x_blocked: jnp.ndarray, n_logical: int, *, interpret: bool = False
+) -> jnp.ndarray:
+    """Row softmax on a (gm, gn, bm, bn) blocked matrix with logical width n."""
+    gm, gn, bm, bn = x_blocked.shape
+    kernel = functools.partial(_softmax_kernel, n_logical=n_logical, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm,),
+        in_specs=[pl.BlockSpec((1, gn, bm, bn), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, gn, bm, bn), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x_blocked.shape, x_blocked.dtype),
+        interpret=interpret,
+    )(x_blocked)

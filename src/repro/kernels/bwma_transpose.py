@@ -1,0 +1,30 @@
+"""Blocked transpose — the paper's §3.2 Transpose on the BWMA layout.
+
+In BWMA a transpose is two nested small transposes: swap the block-grid
+coordinates (done by the output BlockSpec's index map) and transpose each
+block's interior (done on-chip in VMEM).  Every block moves HBM->VMEM->HBM
+as one contiguous run in both directions — the paper's Fig. 5b locality
+argument; the row-major variant gathers strided columns instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_kernel(a_ref, o_ref):
+    o_ref[0, 0] = a_ref[0, 0].T
+
+
+def bwma_transpose(x_blocked: jnp.ndarray, *, interpret: bool = False):
+    """(gm, gn, bm, bn) -> (gn, gm, bn, bm): logical transpose, blocked."""
+    gm, gn, bm, bn = x_blocked.shape
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec((1, 1, bm, bn), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, bn, bm), lambda i, j: (j, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gn, gm, bn, bm), x_blocked.dtype),
+        interpret=interpret,
+    )(x_blocked)

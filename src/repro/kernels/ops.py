@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the kernels compile natively; elsewhere (this
+container is CPU-only) they execute in ``interpret=True`` mode, which runs
+the kernel body per grid step in Python — bit-accurate for validation.
+
+These wrappers also adapt between the logical (2-D) world and the blocked
+(BWMA) world using :mod:`repro.core.layout`, and carry the accelerator block
+size as the layout quantum (the paper's 'governed by the kernel size').
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockwise import Blocked
+from repro.core.layout import BlockLayout, from_blockwise, to_blockwise
+from repro.kernels.bwma_fused_ffn import bwma_fused_ffn
+from repro.kernels.bwma_gemm import bwma_gemm
+from repro.kernels.bwma_layernorm import bwma_layernorm
+from repro.kernels.bwma_softmax import bwma_softmax
+from repro.kernels.rwma_gemm import rwma_gemm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def blocked_matmul(a: Blocked, b: Blocked, out_dtype=None) -> Blocked:
+    """BWMA GEMM on Blocked values (the paper's accelerated hot loop)."""
+    out = bwma_gemm(a.data, b.data, interpret=_interpret())
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return Blocked(out, (a.shape[0], b.shape[1]), a.layout)
+
+
+@jax.jit
+def blocked_softmax(a: Blocked) -> Blocked:
+    out = bwma_softmax(a.data, a.shape[1], interpret=_interpret())
+    return Blocked(out, a.shape, a.layout)
+
+
+@jax.jit
+def blocked_layernorm(a: Blocked, gamma_blocked, beta_blocked) -> Blocked:
+    out = bwma_layernorm(
+        a.data, gamma_blocked, beta_blocked, a.shape[1], interpret=_interpret()
+    )
+    return Blocked(out, a.shape, a.layout)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def blocked_ffn(a: Blocked, w: Blocked, bias_blocked, out_dtype=None) -> Blocked:
+    out = bwma_fused_ffn(a.data, w.data, bias_blocked, interpret=_interpret())
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return Blocked(out, (a.shape[0], w.shape[1]), a.layout)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_rwma(a: jnp.ndarray, b: jnp.ndarray, bm=128, bk=128, bn=128):
+    """Row-major tiled GEMM — the RWMA baseline kernel."""
+    return rwma_gemm(a, b, bm=bm, bk=bk, bn=bn, interpret=_interpret())
+
+
+def matmul_bwma_2d(
+    a: jnp.ndarray, b: jnp.ndarray, layout: BlockLayout = BlockLayout(128, 128)
+) -> jnp.ndarray:
+    """Convenience: 2-D in, 2-D out, blocked internally (conversion at edges
+    only — mirrors the paper's whole-model I/O conversion)."""
+    ab = to_blockwise(a, BlockLayout(layout.bm, layout.bn))
+    bb = to_blockwise(b, BlockLayout(layout.bn, layout.bn))
+    out = bwma_gemm(ab, bb, interpret=_interpret())
+    return from_blockwise(out, layout, (a.shape[0], b.shape[1]))

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle operates on *logical* (row-major / RWMA) arrays; the kernels
+operate on blocked (BWMA) arrays.  Tests block the inputs, run the kernel,
+unblock the output and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, -1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def ffn_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused GEMM + bias + GELU (paper §3.2 Activation: fused at write-back)."""
+    return jax.nn.gelu(matmul_ref(x, w) + b.astype(jnp.float32))

@@ -1,0 +1,55 @@
+"""RWMA tiled GEMM — the paper's baseline arrangement, as a Pallas kernel.
+
+Operands are conventional row-major 2-D arrays.  The tiling (grid and block
+sizes) is identical to :mod:`repro.kernels.bwma_gemm`; the only difference is
+the storage order: here each ``BlockSpec`` step gathers ``bm`` row segments at
+stride ``K*esize`` from HBM (a strided DMA descriptor), versus BWMA's single
+contiguous burst.  Functionally the two are equivalent — which is the point:
+the layout is a pure memory-system optimization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def rwma_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, K) @ (K, N) -> (M, N) with row-major (strided-DMA) operands."""
+    M, K = a.shape
+    K2, N = b.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if M % bm or K % bk or N % bn:
+        raise ValueError(f"shapes {a.shape}x{b.shape} not divisible by blocks")
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), acc_dtype),
+        interpret=interpret,
+    )(a, b)
+    return out

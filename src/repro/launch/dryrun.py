@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent end-to-end:
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(...).compile()``
+must succeed on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh,
+and we record ``memory_analysis`` (fits?) + ``cost_analysis`` (FLOPs/bytes)
++ the HLO collective schedule for the roofline (EXPERIMENTS.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.configs.shapes import applicable, input_specs
+from repro.distributed import axes as AX
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    pick_accum_steps,
+)
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_init, cosine_schedule
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of one HLO result signature like 'bf16[8,2048,128]'. Tuples:
+    sum of elements."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = ([^=]+?) (\w[\w\-]*)\(", line)
+        if not m:
+            continue
+        opname = m.group(2)
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+def build_cell(cfg, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate, info)."""
+    info = {"accum": 1}
+    spec = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    mode = "serve" if spec["kind"] == "decode" else "train"
+    pspecs = SH.param_pspecs(cfg, mesh, params_shape, mode=mode)
+    p_shard = SH.named(mesh, pspecs)
+    if spec["kind"] == "train":
+        import jax.numpy as _jnp
+        oc = OptConfig(
+            moment_dtype=_jnp.bfloat16 if cfg.param_count() > 1e11
+            else _jnp.float32
+        )
+        opt_shape = jax.eval_shape(lambda p: adamw_init(p, oc), params_shape)
+        ospecs = SH.opt_pspecs(cfg, mesh, opt_shape, pspecs)
+        o_shard = SH.named(mesh, ospecs)
+        bspecs = SH.batch_pspecs(cfg, mesh, spec["batch"])
+        b_shard = SH.named(mesh, bspecs)
+        from repro.configs.base import SHAPES
+        shp = SHAPES[shape_name]
+        dp_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                               if a != "model"]))
+        # §Perf iteration 3 (hillclimbed cell): bigger activation budget =>
+        # accum 8 -> 4 => FSDP gather bytes halved for deepseek-v3 multi-pod.
+        budget = (8 * 2**30 if (cfg.name == "deepseek-v3-671b"
+                                and mesh.size == 512) else 4 * 2**30)
+        accum = pick_accum_steps(cfg, shp.global_batch, shp.seq_len, dp_size,
+                                 budget_bytes=budget)
+        info["accum"] = accum
+        fn = make_train_step(cfg, oc, cosine_schedule(3e-4, 100, 10000),
+                             accum_steps=accum, grad_pspecs=pspecs)
+        args = (params_shape, opt_shape, spec["batch"])
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+        donate = (0, 1)
+    elif spec["kind"] == "prefill":
+        bspecs = SH.batch_pspecs(cfg, mesh, spec["batch"])
+        b_shard = SH.named(mesh, bspecs)
+        fn = make_prefill_step(cfg)
+        args = (params_shape, spec["batch"])
+        in_sh = (p_shard, b_shard)
+        out_sh = None
+        donate = ()
+    else:  # decode
+        cspecs = SH.cache_pspecs(cfg, mesh, spec["caches"])
+        c_shard = SH.named(mesh, cspecs)
+        tok_shard = SH.named(
+            mesh, SH.batch_pspecs(cfg, mesh, {"tokens": spec["tokens"]})
+        )["tokens"]
+        pos_shard = NamedSharding(mesh, P())
+        fn = make_decode_step(cfg)
+        args = (params_shape, spec["caches"], spec["tokens"], spec["pos"])
+        in_sh = (p_shard, c_shard, tok_shard, pos_shard)
+        out_sh = (None, c_shard)
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate, info
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> Dict:
+    cfg = C.get_config(arch)
+    ok, reason = applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate, info = build_cell(cfg, shape_name, mesh)
+        with mesh, AX.policy(mesh):
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=mesh.size,
+            memory={
+                k: int(getattr(mem, k))
+                for k in (
+                    "temp_size_in_bytes",
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "alias_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+            collectives=coll,
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+            accum_steps=info.get("accum", 1),
+        )
+    except Exception as e:  # record the failure — failures here are bugs
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_kind}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"],
+                    choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    archs = C.arch_ids() if args.arch == ["all"] else args.arch
+    shapes = list(C.SHAPES) if args.shape == ["all"] else args.shape
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in args.mesh:
+                rec = run_cell(arch, shape, mesh_kind, args.out)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_err += status == "error"
+                n_skip += status == "skipped"
+                msg = rec.get("error", rec.get("reason", ""))
+                extra = ""
+                if status == "ok":
+                    mem_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+                    extra = (f"args={mem_gb:.2f}GiB/dev "
+                             f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                             f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+                print(f"[{status:7s}] {arch} x {shape} x {mesh_kind} {extra}{msg}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_err} errors, {n_skip} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod).
+Multi-pod: 2 pods x 256 = 512 chips with a leading "pod" axis (DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (tests / examples on CPU): (data=1, model=n)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,67 @@
+"""Training entry point.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke \
+      --steps 100 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+On a real cluster this binary runs per host (jax.distributed.initialize) and
+``--mesh single|multi`` selects the production mesh; on this CPU container
+use --smoke (reduced config, local mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.optim import OptConfig, wsd_schedule
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=C.arch_ids())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--wsd", action="store_true",
+                    help="WSD schedule (MiniCPM) instead of cosine")
+    ap.add_argument("--grad-compression", choices=["int8"], default=None)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-step straggler deadline (s)")
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch, smoke=args.smoke,
+                       dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    mesh = (make_local_mesh() if args.mesh == "local"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    lr_fn = None
+    if args.wsd:
+        lr_fn = wsd_schedule(args.lr, args.steps // 10, args.steps * 7 // 10,
+                             args.steps // 5)
+    tc = TrainerConfig(
+        steps=args.steps, accum_steps=args.accum,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt,
+        step_deadline_s=args.deadline, grad_compression=args.grad_compression,
+    )
+    tr = Trainer(cfg, mesh, tc, OptConfig(lr=args.lr), lr_fn=lr_fn)
+    data = SyntheticLMData(cfg, global_batch=args.batch, seq_len=args.seq)
+    params, opt, hist = tr.fit(data)
+    print(f"final loss: {hist[-1]['loss']:.4f}"
+          f" (start {hist[0]['loss']:.4f})")
+    if tr.straggler_events:
+        print(f"straggler events: {len(tr.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

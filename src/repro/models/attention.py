@@ -1,0 +1,248 @@
+"""Attention modules: GQA (full / sliding-window, RoPE / M-RoPE) and MLA.
+
+Functional style: ``init`` returns a params dict; ``forward`` handles the
+three execution modes:
+
+* ``train``    — full-sequence, no cache;
+* ``prefill``  — full-sequence, returns a populated cache;
+* ``decode``   — one token against the cache (ring buffer for SWA).
+
+MLA (DeepSeek-V3) caches the *latent* c_kv + the shared rotary key — the
+point of MLA — and uses the absorbed-matmul formulation at decode time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dense,
+    dense_init,
+)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> Dict:
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * dh, cfg.dtype),
+        "wk": dense_init(ks[1], d, Hkv * dh, cfg.dtype),
+        "wv": dense_init(ks[2], d, Hkv * dh, cfg.dtype),
+        "wo": dense_init(ks[3], H * dh, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), cfg.dtype)
+    return p
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, window_only: bool):
+    """Cache for one layer.  SWA keeps only ``window`` slots (ring buffer)."""
+    slots = min(cfg.window, max_len) if window_only else max_len
+    dh = cfg.d_head
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, dh), cfg.dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, dh), cfg.dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(cfg, x, p["wq"])
+    k = dense(cfg, x, p["wk"])
+    v = dense(cfg, x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q, ("dp", None, "tp"))
+    k = constrain(k, ("dp", None, "tp"))
+    v = constrain(v, ("dp", None, "tp"))
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    if cfg.use_rope:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    positions,  # (B, S) or (3, B, S) for M-RoPE
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    pos_offset=0,  # scalar: absolute position of x[:, 0] (decode/prefill)
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, _ = x.shape
+    window = window if window is not None else (
+        cfg.window if cfg.attn_type == "swa" else None
+    )
+    q, k, v = _project_qkv(p, cfg, x, positions)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        slots = cache["k"].shape[1]
+        slot = jnp.mod(pos_offset, slots)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        pos_new = jnp.full((B, 1), pos_offset, jnp.int32)
+        pos_cache = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, slot))
+        out = decode_attention(
+            q, k_cache, v_cache, pos_cache, pos_offset, window=window
+        )
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, q_offset=pos_offset,
+            window=window, q_chunk=cfg.q_chunk,
+        )
+        new_cache = None
+        if mode == "prefill":
+            # populate the cache (SWA: keep the trailing ``window`` tokens)
+            slots = min(cfg.window, S) if window is not None else S
+            ks, vs = k[:, -slots:], v[:, -slots:]
+            pos = jnp.broadcast_to(
+                jnp.arange(S - slots, S, dtype=jnp.int32)[None], (B, slots)
+            )
+            if window is not None and slots == cfg.window:
+                # ring-buffer order: token at absolute position p sits in slot
+                # p % window, so later decode steps index consistently.
+                slot_of = jnp.mod(jnp.arange(S - slots, S), slots)
+                inv = jnp.argsort(slot_of)
+                ks, vs, pos = ks[:, inv], vs[:, inv], pos[:, inv]
+            new_cache = {"k": ks, "v": vs, "pos": pos}
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return dense(cfg, out, p["wo"]), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, r_q, cfg.dtype),
+        "q_norm": jnp.ones((r_q,), cfg.dtype),
+        "wq_b": dense_init(ks[1], r_q, H * (dn + dr), cfg.dtype),
+        "wkv_a": dense_init(ks[2], d, r_kv + dr, cfg.dtype),
+        "kv_norm": jnp.ones((r_kv,), cfg.dtype),
+        "wkv_b": dense_init(ks[3], r_kv, H * (dn + dv), cfg.dtype),
+        "wo": dense_init(ks[4], H * dv, d, cfg.dtype),
+    }
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    """MLA caches the latent (r_kv) + shared rotary key (dr) — tiny vs GQA."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), cfg.dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_qkv_latent(p, cfg: ModelConfig, x, positions):
+    """Common projections: per-head q (nope+rope), latent ckv, shared k_rope."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _rms(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]  # (B, S, r_kv + dr)
+    ckv = _rms(kv[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(
+        kv[..., cfg.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]  # (B, S, dr) — shared across heads
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions,
+    *,
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    pos_offset=0,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, cfg, x, positions)
+    wkv_b = p["wkv_b"].reshape(r_kv, H, dn + dv)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos_offset, 0))
+        kr_c = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, pos_offset, 0))
+        pos_new = jnp.full((B, 1), pos_offset, jnp.int32)
+        pos_c = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, pos_offset))
+        # absorbed formulation: score = q_nope · (W_kv_b,k^T c) + q_rope · k_rope
+        #                             = (q_nope W_k^T) · c + q_rope · k_rope
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkv_b[..., :dn])  # (B,1,H,r)
+        s = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_c,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshd,bkd->bhsk", q_rope, kr_c,
+                        preferred_element_type=jnp.float32)
+        s *= scale
+        valid = (pos_c >= 0) & (pos_c <= pos_offset)
+        s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+        att = jax.nn.softmax(s, -1).astype(ckv.dtype)  # (B, H, 1, Sc)
+        o_lat = jnp.einsum("bhsk,bkr->bshr", att, ckv_c)  # (B, 1, H, r)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, wkv_b[..., dn:])  # value expand
+        new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": pos_c}
+    else:
+        # expanded formulation (train / prefill)
+        kv = jnp.einsum("bsr,rhd->bshd", ckv, wkv_b)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1
+        )
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(
+            q, k, v, causal=True, q_offset=pos_offset, q_chunk=cfg.q_chunk,
+            scale=scale,
+        )
+        new_cache = None
+        if mode == "prefill":
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            new_cache = {"ckv": ckv, "krope": k_rope, "pos": pos}
+    out = out.reshape(B, S, H * dv)
+    return out @ p["wo"], new_cache

@@ -1,0 +1,172 @@
+"""Feed-forward modules: dense (SwiGLU / GELU) and token-choice top-k MoE.
+
+The MoE uses a sort-based capacity dispatch (no (T, E, C) one-hot tensor):
+tokens are ranked within their chosen expert via argsort + searchsorted, then
+scattered into an (E, C, d) buffer.  Under the production mesh the buffer is
+expert-sharded (EP) so the scatter lowers to an all-to-all-ish collective —
+see distributed/sharding.py for the placement rules.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models.common import activation, dense, dense_init
+
+
+# --------------------------------------------------------------------------
+# Dense FFN
+# --------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "w_gate": dense_init(ks[0], d, f, cfg.dtype),
+            "w_up": dense_init(ks[1], d, f, cfg.dtype),
+            "w_down": dense_init(ks[2], f, d, cfg.dtype),
+        }
+    return {  # GELU MLP (whisper / bert style)
+        "w_up": dense_init(ks[0], d, f, cfg.dtype),
+        "b_up": jnp.zeros((f,), cfg.dtype),
+        "w_down": dense_init(ks[1], f, d, cfg.dtype),
+        "b_down": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def ffn_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in p:
+        gate = jax.nn.silu(dense(cfg, x, p["w_gate"]))
+        return dense(cfg, gate * dense(cfg, x, p["w_up"]), p["w_down"])
+    h = jax.nn.gelu(dense(cfg, x, p["w_up"]) + p["b_up"])
+    return dense(cfg, h, p["w_down"]) + p["b_down"]
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # fp32 router
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * d ** -0.5
+                   ).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * d ** -0.5
+                 ).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) * f ** -0.5
+                   ).astype(cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[4], cfg, cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _moe_groups(T: int) -> int:
+    """Token groups for group-limited routing — aligned to the DP shards so
+    per-group sort/scatter stays device-local and the group->expert reshard
+    lowers to the canonical MoE all-to-all."""
+    from repro.distributed.axes import current
+
+    pol = current()
+    G = pol.dp_size if pol is not None else 1
+    return G if G > 0 and T % G == 0 else 1
+
+
+def moe_forward(
+    p: Dict, cfg: ModelConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Token-choice top-k with *group-limited* capacity (DeepSeek-style):
+    tokens are split into G groups (= DP shards); each group dispatches
+    independently into an (E, Cg) buffer, so the sort/scatter/gather are
+    local per group and only the expert einsums cross devices (all-to-all).
+    Overflow tokens drop that expert (their other choices + the shared
+    experts still apply).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _moe_groups(T)
+    Tg = T // G
+    xg = constrain(x.reshape(G, Tg, d), ("dp", None, None))
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"]
+    )  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style, global) ----
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # ---- per-group capacity dispatch (sort-based, scatter-free) ----
+    # Everything is gathers (take_along_axis) + an inverse permutation;
+    # 2-D-index scatters made XLA materialize per-element u32 index tensors
+    # (hundreds of GB at DeepSeek scale).
+    Cg = max(8, -(-int(Tg * k * cfg.capacity_factor / E) // 8) * 8)
+    flat_e = idx.reshape(G, Tg * k)
+    token_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k)
+    )
+    gate_flat = gate_vals.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    rank = jnp.arange(Tg * k)[None] - jnp.take_along_axis(start, sorted_e, axis=1)
+    keep = rank < Cg
+    src_tok = jnp.take_along_axis(token_of, order, axis=1)  # (G, Tg*k)
+    x_sorted = jnp.take_along_axis(xg, src_tok[..., None], axis=1)
+    # expert buffer by *gather*: slot (e, c) reads sorted position start[e]+c
+    ec = jnp.arange(E * Cg)
+    e_of, c_of = ec // Cg, ec % Cg
+    start_ext = jnp.concatenate(
+        [start, jnp.full((G, 1), Tg * k, start.dtype)], axis=1
+    )
+    pos = start[:, e_of] + c_of[None]  # (G, E*Cg)
+    counts = start_ext[:, e_of + 1] - start[:, e_of]
+    valid = c_of[None] < jnp.minimum(counts, Cg)
+    xe = jnp.take_along_axis(
+        x_sorted, jnp.clip(pos, 0, Tg * k - 1)[..., None], axis=1
+    ) * valid[..., None].astype(cfg.dtype)
+    xe = xe.reshape(G, E, Cg, d)
+    # group-sharded -> expert-sharded: the MoE all-to-all happens here
+    xe = constrain(xe, (None, "ep", None, None))
+
+    # ---- expert computation (EP einsums over E) ----
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+    # ---- combine back to tokens (expert-sharded -> group-sharded) ----
+    # (no explicit constraint: GSPMD derives the reverse all-to-all from the
+    # gather-back below; forcing dp here fought the EP einsum's output
+    # sharding and triggered full rematerializations)
+    ye = ye.reshape(G, E * Cg, d)
+    slot = jnp.where(keep, sorted_e * Cg + rank, 0)
+    y_sorted = jnp.take_along_axis(ye, slot[..., None], axis=1)  # (G, Tg*k, d)
+    gate_sorted = jnp.take_along_axis(gate_flat, order, axis=1)
+    contrib = y_sorted * (gate_sorted * keep)[..., None].astype(cfg.dtype)
+    # undo the sort: element at sorted position s belongs at flat position
+    # order[s]; applying the inverse permutation restores (token, choice)
+    # order, so the per-token combine is a plain reshape + sum over k.
+    inv_order = jnp.argsort(order, axis=1)
+    contrib = jnp.take_along_axis(contrib, inv_order[..., None], axis=1)
+    out = contrib.reshape(G, Tg, k, d).sum(axis=2)
+    out = constrain(out, ("dp", None, None))
+
+    if cfg.n_shared_experts:
+        out = out + ffn_forward(p["shared"], cfg, xg)
+    return out.reshape(B, S, d), aux

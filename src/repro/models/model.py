@@ -1,0 +1,521 @@
+"""Model assembly: one functional LM supporting every assigned family.
+
+Layers are grouped into homogeneous *segments* (e.g. DeepSeek-V3 = 3 dense
+layers + 58 MoE layers); each segment's parameters are stacked along a
+leading L axis and executed with ``jax.lax.scan`` (+ remat in training) so
+the HLO stays compact enough to compile 512-device dry-runs on CPU.
+
+Execution modes: ``train`` (loss), ``prefill`` (populate caches),
+``decode`` (one token against caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models import attention as attn
+from repro.models import ffn as ffnm
+from repro.models import ssm as ssmm
+from repro.models.common import apply_norm, default_positions, dense_init, norm_init
+
+
+# --------------------------------------------------------------------------
+# Segments
+# --------------------------------------------------------------------------
+
+def layer_segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    if cfg.family == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("hybrid", cfg.n_layers)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(("dense", cfg.first_k_dense))
+        segs.append(("moe", cfg.n_layers - cfg.first_k_dense))
+        return segs
+    return [("dense", cfg.n_layers)]  # dense / vlm / encdec decoder
+
+
+def _attn_init(key, cfg: ModelConfig):
+    return attn.mla_init(key, cfg) if cfg.attn_type == "mla" else attn.gqa_init(key, cfg)
+
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": norm_init(cfg, cfg.d_model)}
+    if kind == "ssm":
+        p["ssm"] = ssmm.ssm_init(ks[0], cfg)
+        return p
+    p["attn"] = _attn_init(ks[0], cfg)
+    if kind == "hybrid":
+        p["ssm"] = ssmm.ssm_init(ks[1], cfg)
+    p["ln2"] = norm_init(cfg, cfg.d_model)
+    if kind == "moe":
+        p["moe"] = ffnm.moe_init(ks[2], cfg)
+    else:
+        p["ffn"] = ffnm.ffn_init(ks[2], cfg)
+    return p
+
+
+def layer_forward(
+    cfg: ModelConfig,
+    kind: str,
+    p: Dict,
+    x: jnp.ndarray,
+    positions,
+    *,
+    mode: str,
+    cache: Optional[Dict],
+    pos_offset,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "ssm":
+        out, st = ssmm.ssm_forward(
+            p["ssm"], cfg, h, mode=mode,
+            state=cache.get("ssm") if cache else None,
+        )
+        if st is not None:
+            new_cache["ssm"] = st
+        return x + out, (new_cache or None), aux
+
+    if cfg.attn_type == "mla":
+        a_out, a_cache = attn.mla_forward(
+            p["attn"], cfg, h, positions, mode=mode,
+            cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
+        )
+    else:
+        a_out, a_cache = attn.gqa_forward(
+            p["attn"], cfg, h, positions, mode=mode,
+            cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
+        )
+    if a_cache is not None:
+        new_cache["attn"] = a_cache
+    if kind == "hybrid":
+        s_out, st = ssmm.ssm_forward(
+            p["ssm"], cfg, h, mode=mode,
+            state=cache.get("ssm") if cache else None,
+        )
+        if st is not None:
+            new_cache["ssm"] = st
+        mixer_out = 0.5 * (a_out + s_out)  # Hymba: fused parallel heads
+    else:
+        mixer_out = a_out
+    x = x + mixer_out
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        m_out, m_aux = ffnm.moe_forward(p["moe"], cfg, h2)
+        x = x + m_out
+        aux = aux + m_aux
+    else:
+        x = x + ffnm.ffn_forward(p["ffn"], cfg, h2)
+    x = constrain(x, ("dp", None, None))
+    return x, (new_cache or None), aux
+
+
+# --------------------------------------------------------------------------
+# Cache init
+# --------------------------------------------------------------------------
+
+def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    c: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid"):
+        if cfg.attn_type == "mla":
+            c["attn"] = attn.mla_cache_init(cfg, batch, max_len)
+        else:
+            c["attn"] = attn.gqa_cache_init(
+                cfg, batch, max_len, window_only=(cfg.attn_type == "swa")
+            )
+    if kind in ("ssm", "hybrid"):
+        c["ssm"] = ssmm.ssm_state_init(cfg, batch)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked-per-segment cache pytree for decode."""
+    segs = {}
+    for si, (kind, n) in enumerate(layer_segments(cfg)):
+        one = _layer_cache_init(cfg, kind, batch, max_len)
+        segs[f"seg{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one
+        )
+    if cfg.n_encoder_layers:  # whisper: cross-attention K/V filled at prefill
+        d = cfg.n_heads * cfg.d_head
+        segs["cross"] = {
+            "k": jnp.zeros(
+                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head),
+                cfg.dtype,
+            ),
+            "v": jnp.zeros(
+                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head),
+                cfg.dtype,
+            ),
+        }
+    return segs
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.padded_vocab  # padded for even TP shards
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (V, d), jnp.float32) * 0.02
+                  ).astype(cfg.dtype),
+        "final_norm": norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], d, V, cfg.dtype, scale=0.02)
+    ki = 2
+    for si, (kind, n) in enumerate(layer_segments(cfg)):
+        seg_keys = jax.random.split(keys[ki], n)
+        ki += 1
+        params[f"seg{si}"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind)
+        )(seg_keys)
+    if cfg.mtp_depth:
+        mk = jax.random.split(keys[5], 3)
+        params["mtp"] = {
+            "proj": dense_init(mk[0], 2 * d, d, cfg.dtype),
+            "norm_h": norm_init(cfg, d),
+            "norm_e": norm_init(cfg, d),
+            "layer": init_layer(mk[1], cfg, "dense"),
+            "final_norm": norm_init(cfg, d),
+        }
+    if cfg.n_encoder_layers:
+        ek = jax.random.split(keys[6], cfg.n_encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _enc_layer_init(k, cfg)
+        )(ek)
+        params["enc_final_norm"] = norm_init(cfg, d)
+        params["enc_pos"] = (jax.random.normal(keys[7], (cfg.encoder_seq, d),
+                                               jnp.float32) * 0.02).astype(cfg.dtype)
+        # decoder cross-attention weights (per decoder layer, stacked)
+        ck = jax.random.split(jax.random.fold_in(key, 99), cfg.n_layers)
+        params["cross"] = jax.vmap(lambda k: _cross_init(k, cfg))(ck)
+        params["dec_pos"] = (jax.random.normal(jax.random.fold_in(key, 98),
+                                               (cfg.max_decoder_positions, d),
+                                               jnp.float32) * 0.02
+                             ).astype(cfg.dtype)
+    return params
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_init(cfg, cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "ln2": norm_init(cfg, cfg.d_model),
+        "ffn": ffnm.ffn_init(ks[1], cfg),
+    }
+
+
+def _cross_init(key, cfg: ModelConfig):
+    return {"ln": norm_init(cfg, cfg.d_model), "attn": attn.gqa_init(key, cfg)}
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, batch: Dict) -> Tuple[jnp.ndarray, Any]:
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = constrain(h, ("dp", None, None))
+    if cfg.frontend == "vision" and "vis_embeds" in batch:
+        # stub frontend: precomputed patch embeddings occupy the prefix
+        v = batch["vis_embeds"].astype(h.dtype)
+        h = jax.lax.dynamic_update_slice(h, v, (0, 0, 0))
+    if cfg.mrope_sections and "positions3" in batch:
+        positions = batch["positions3"]
+    else:
+        positions = default_positions(tokens.shape[0], tokens.shape[1])
+    return h, positions
+
+
+def _run_segments(
+    cfg: ModelConfig, params, h, positions, *, mode: str, caches=None,
+    pos_offset=0, remat: bool = False,
+):
+    """Scan each stacked segment; returns (h, new_caches, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for si, (kind, n) in enumerate(layer_segments(cfg)):
+        stacked = params[f"seg{si}"]
+        cache_seg = caches.get(f"seg{si}") if caches else None
+
+        def body(carry, inp, _kind=kind):
+            x = carry
+            p_layer = inp[0]
+            c_layer = inp[1] if cache_seg is not None else None
+            x, c_new, aux = layer_forward(
+                cfg, _kind, p_layer, x, positions,
+                mode=mode, cache=c_layer, pos_offset=pos_offset,
+            )
+            if c_new is None:
+                c_new = 0  # scan needs a consistent pytree; 0 = no cache
+            return x, (c_new, aux)
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (stacked, cache_seg) if cache_seg is not None else (stacked,)
+        h, (cache_out, auxs) = jax.lax.scan(body, h, xs)
+        aux_total = aux_total + jnp.sum(auxs)
+        if mode in ("prefill", "decode"):
+            new_caches[f"seg{si}"] = cache_out
+    return h, new_caches, aux_total
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict, *, remat: bool = True):
+    """Returns (per-token logits, aux losses, final hidden)."""
+    if cfg.n_encoder_layers:
+        return _forward_encdec_train(cfg, params, batch, remat=remat)
+    h, positions = _embed_inputs(cfg, params, batch)
+    h, _, aux = _run_segments(cfg, params, h, positions, mode="train", remat=remat)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _lm_logits(cfg, params, h)
+    return logits, aux, h
+
+
+def _lm_logits(cfg: ModelConfig, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(h @ w, ("dp", None, "tp"))
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad columns so logsumexp / sampling never see them
+        pad_mask = (
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            < cfg.vocab_size
+        )
+        logits = jnp.where(pad_mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over positions with label >= 0 (fp32 logsumexp).
+
+    The label log-prob is extracted with an iota-compare masked sum instead of
+    ``take_along_axis``: a vocab-dim gather forces GSPMD to all-gather the
+    (B, S, V) logits when the vocab is TP-sharded, whereas the masked sum
+    stays local per shard and reduces with one psum.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        == labels[..., None]
+    )
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict, *, remat: bool = True):
+    """Next-token LM loss (+ MoE aux, + MTP head for DeepSeek-V3)."""
+    if cfg.n_encoder_layers:
+        logits, aux, _ = _forward_encdec_train(cfg, params, batch, remat=remat)
+        loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return loss + aux, {"ce": loss, "aux": aux}
+    logits, aux, h = forward_train(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    loss = cross_entropy(logits[:, :-1], labels[:, :-1])
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(cfg, params, h, batch)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.1 * mtp_loss
+    return loss + aux, metrics
+
+
+def _mtp_loss(cfg: ModelConfig, params, h, batch):
+    """DeepSeek-V3 multi-token prediction: one extra transformer block
+    predicting token t+2 from [h_t ; emb(token_{t+1})], sharing the head."""
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    e_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)
+    h_cur = h[:, :-1]
+    comb = jnp.concatenate(
+        [apply_norm(cfg, p["norm_h"], h_cur), apply_norm(cfg, p["norm_e"], e_next)],
+        axis=-1,
+    ) @ p["proj"]
+    positions = default_positions(comb.shape[0], comb.shape[1])
+    out, _, _ = layer_forward(
+        cfg, "dense", p["layer"], comb, positions,
+        mode="train", cache=None, pos_offset=0,
+    )
+    out = apply_norm(cfg, p["final_norm"], out)
+    logits = _lm_logits(cfg, params, out)  # predicts labels shifted by +1
+    return cross_entropy(logits[:, :-1], labels[:, 1:-1])
+
+
+# --------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# --------------------------------------------------------------------------
+
+def _encoder_forward(cfg: ModelConfig, params, audio_embeds, *, remat=False):
+    h = audio_embeds.astype(cfg.dtype) + params["enc_pos"][None]
+    positions = default_positions(h.shape[0], h.shape[1])
+
+    def body(carry, p_layer):
+        x = carry
+        hh = apply_norm(cfg, p_layer["ln1"], x)
+        a, _ = attn.gqa_forward(p_layer["attn"], cfg, hh, positions,
+                                mode="train", causal=False)
+        x = x + a
+        x = x + ffnm.ffn_forward(
+            p_layer["ffn"], cfg, apply_norm(cfg, p_layer["ln2"], x)
+        )
+        return x, 0
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return apply_norm(cfg, params["enc_final_norm"], h)
+
+
+def _dec_layer(cfg, p_layer, p_cross, x, positions, enc_out, *, mode,
+               cache, pos_offset):
+    new_cache = {}
+    h = apply_norm(cfg, p_layer["ln1"], x)
+    a, c = attn.gqa_forward(
+        p_layer["attn"], cfg, h, positions, mode=mode,
+        cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
+    )
+    if c is not None:
+        new_cache["attn"] = c
+    x = x + a
+    # cross attention (non-causal over encoder output)
+    hc = apply_norm(cfg, p_cross["ln"], x)
+    pc = p_cross["attn"]
+    B, S, _ = hc.shape
+    q = (hc @ pc["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    if mode == "decode" and cache is not None and "cross_k" in cache:
+        ck, cv = cache["cross_k"], cache["cross_v"]
+    else:
+        ck = (enc_out @ pc["wk"]).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+        cv = (enc_out @ pc["wv"]).reshape(
+            B, -1, cfg.n_kv_heads, cfg.d_head)
+    from repro.models.common import chunked_attention
+    cross = chunked_attention(q, ck, cv, causal=False, q_chunk=cfg.q_chunk)
+    x = x + cross.reshape(B, S, -1) @ pc["wo"]
+    x = x + ffnm.ffn_forward(
+        p_layer["ffn"], cfg, apply_norm(cfg, p_layer["ln2"], x)
+    )
+    return x, new_cache, (ck, cv)
+
+
+def _forward_encdec_train(cfg: ModelConfig, params, batch, *, remat=True):
+    enc_out = _encoder_forward(cfg, params, batch["audio_embeds"], remat=remat)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :S]
+    positions = default_positions(B, S)
+
+    def body(carry, inp):
+        x = carry
+        p_layer, p_cross = inp
+        x, _, _ = _dec_layer(cfg, p_layer, p_cross, x, positions, enc_out,
+                             mode="train", cache=None, pos_offset=0)
+        return x, 0
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, (params["seg0"], params["cross"]))
+    h = apply_norm(cfg, params["final_norm"], h)
+    return _lm_logits(cfg, params, h), jnp.zeros((), jnp.float32), h
+
+
+# --------------------------------------------------------------------------
+# Prefill / decode
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, batch: Dict):
+    """Full-sequence forward that returns (last-position logits, caches)."""
+    if cfg.n_encoder_layers:
+        return _prefill_encdec(cfg, params, batch)
+    h, positions = _embed_inputs(cfg, params, batch)
+    h, caches, _ = _run_segments(
+        cfg, params, h, positions, mode="prefill", remat=False
+    )
+    h = apply_norm(cfg, params["final_norm"], h[:, -1:])
+    return _lm_logits(cfg, params, h), caches
+
+
+def _prefill_encdec(cfg: ModelConfig, params, batch):
+    enc_out = _encoder_forward(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :S]
+    positions = default_positions(B, S)
+
+    def body(carry, inp):
+        x = carry
+        p_layer, p_cross = inp
+        x, c_new, (ck, cv) = _dec_layer(
+            cfg, p_layer, p_cross, x, positions, enc_out,
+            mode="prefill", cache=None, pos_offset=0,
+        )
+        return x, (c_new, ck, cv)
+
+    h, (self_caches, cks, cvs) = jax.lax.scan(body, h, (params["seg0"], params["cross"]))
+    h = apply_norm(cfg, params["final_norm"], h[:, -1:])
+    caches = {"seg0": self_caches, "cross": {"k": cks, "v": cvs}}
+    return _lm_logits(cfg, params, h), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 absolute
+    position.  Returns (logits (B, 1, V), new caches)."""
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32), (3, B, 1)
+        )
+    else:
+        positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+    if cfg.n_encoder_layers:
+        return _decode_encdec(cfg, params, caches, h, positions, pos)
+    h, new_caches, _ = _run_segments(
+        cfg, params, h, positions, mode="decode", caches=caches, pos_offset=pos,
+        remat=False,
+    )
+    h = apply_norm(cfg, params["final_norm"], h)
+    return _lm_logits(cfg, params, h), new_caches
+
+
+def _decode_encdec(cfg: ModelConfig, params, caches, h, positions, pos):
+    h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None]
+
+    def body(carry, inp):
+        x = carry
+        p_layer, p_cross, c_self, ck, cv = inp
+        c_layer = dict(c_self)
+        c_layer["cross_k"] = ck
+        c_layer["cross_v"] = cv
+        x, c_new, _ = _dec_layer(
+            cfg, p_layer, p_cross, x, positions, None,
+            mode="decode", cache=c_layer, pos_offset=pos,
+        )
+        return x, c_new
+
+    h, new_self = jax.lax.scan(
+        body, h,
+        (params["seg0"], params["cross"], caches["seg0"],
+         caches["cross"]["k"], caches["cross"]["v"]),
+    )
+    h = apply_norm(cfg, params["final_norm"], h)
+    new_caches = {"seg0": new_self, "cross": caches["cross"]}
+    return _lm_logits(cfg, params, h), new_caches

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD — state-space duality) block, pure JAX.
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is the
+dual *quadratic* form (block GEMMs — which is where the paper's BWMA layout
+applies, see DESIGN.md §Arch-applicability), across chunks a linear scan
+carries the (H, P, N) state.  A naive step-by-step recurrence is provided as
+the test oracle, and doubles as the decode step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    d_in = cfg.d_inner
+    H = cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    return d_in, H, P, G, N
+
+
+def ssm_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, H, P, G, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * G * N + H, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn_w": jnp.ones((d_in,), cfg.dtype),
+        "out_proj": dense_init(ks[2], d_in, d, cfg.dtype),
+    }
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    d_in, H, P, G, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+    }
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d via shifted adds.  xBC: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    if history is not None:
+        xpad = jnp.concatenate([history, xBC], axis=1)  # (B, K-1+S, C)
+    else:
+        xpad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = b
+    acc = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(K):
+        acc = acc + xpad[:, i : i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(acc + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _split_proj(p, cfg: ModelConfig, x):
+    d_in, H, P, G, N = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * G * N :].astype(jnp.float32)  # (B, S, H)
+    return z, xBC, dt
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    """Mamba-2 RMSNormGated: rmsnorm(y * silu(z)) * w."""
+    g = (y.astype(jnp.float32)) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + eps)
+    return (g * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    mode: str = "train",
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Chunked SSD forward.  Returns (out, final_state if prefill/decode)."""
+    if mode == "decode":
+        return ssm_step(p, cfg, x, state)
+    B, S, d = x.shape
+    d_in, H, P, G, N = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+
+    z, xBC, dt = _split_proj(p, cfg, x)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_in].reshape(B, S, H, P)
+    B_ = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    C_ = xBC[..., d_in + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    dA = dt * a  # (B, S, H) log-decay per step
+
+    # chunk views
+    hg = H // G  # heads per B/C group
+    xs_c = (xs * dt[..., None]).reshape(B, nc, Q, H, P)  # discretized input
+    B_c = B_.reshape(B, nc, Q, G, N)
+    C_c = C_.reshape(B, nc, Q, G, N)
+    dA_c = dA.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(dA_c, axis=2)  # (B, nc, Q, H)
+    total = cum[:, :, -1]  # (B, nc, H)
+
+    # ---- intra-chunk (quadratic dual form: block GEMMs) ----
+    # L[i, j] = exp(cum_i - cum_j) for j <= i.  Mask BEFORE the exp: the
+    # upper triangle has positive exponents that overflow to inf, and
+    # where(mask, inf, 0) still produces NaN gradients (0 * inf).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -1e30))  # fp32; exp(-1e30) == 0
+    cb = jnp.einsum("bcqgn,bckgn->bcqkg", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))  # (B,nc,Q,Q,G)
+    cb = jnp.repeat(cb, hg, axis=-1)  # (B,nc,Q,Q,H)
+    scores = cb * L
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xs_c.astype(jnp.float32))
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    # heads map to group h // hg; expand B/C to heads (G is small)
+    B_heads = jnp.repeat(B_c, hg, axis=3)  # (B, nc, Q, H, N)
+    S_local = jnp.einsum(
+        "bcqhn,bcqhp->bchpn",
+        B_heads.astype(jnp.float32) * decay_to_end[..., None],
+        xs_c.astype(jnp.float32),
+    )  # (B, nc, H, P, N)
+
+    # ---- inter-chunk scan ----
+    init = (state["state"] if state is not None
+            else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def scan_fn(carry, inp):
+        s_loc, tot = inp  # (B,H,P,N), (B,H)
+        new = jnp.exp(tot)[..., None, None] * carry + s_loc
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    C_heads = jnp.repeat(C_c, hg, axis=3)
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp",
+        C_heads.astype(jnp.float32) * jnp.exp(cum)[..., None],
+        prev_states,
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)  # skip path
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    out = _gated_norm(y, z, p["gn_w"]) @ p["out_proj"]
+
+    new_state = None
+    if mode in ("prefill", "decode"):
+        conv_hist = xBC_raw_tail(p, cfg, x)  # last (K-1) pre-conv features
+        new_state = {"state": final_state, "conv": conv_hist}
+    return out, new_state
+
+
+def xBC_raw_tail(p, cfg: ModelConfig, x):
+    """Recompute the last (conv-1) pre-activation conv inputs for the cache."""
+    K = cfg.ssm_conv
+    _, xBC, _ = _split_proj(p, cfg, x[:, -(K - 1):])
+    return xBC
+
+
+def _group_mask(H, G):  # pragma: no cover - unused helper kept for clarity
+    return jnp.ones((H,), jnp.float32)
+
+
+def ssm_step(
+    p: Dict, cfg: ModelConfig, x: jnp.ndarray, state: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token recurrence (decode).  x: (B, 1, d)."""
+    B = x.shape[0]
+    d_in, H, P, G, N = ssm_dims(cfg)
+    hg = H // G
+    z, xBC, dt = _split_proj(p, cfg, x)
+    conv_in = jnp.concatenate([state["conv"], xBC], axis=1)  # (B, K, C)
+    w = p["conv_w"]
+    acc = jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    xBC_t = jax.nn.silu(acc + p["conv_b"].astype(jnp.float32))  # (B, C)
+    xs = xBC_t[:, :d_in].reshape(B, H, P)
+    B_ = xBC_t[:, d_in : d_in + G * N].reshape(B, G, N)
+    C_ = xBC_t[:, d_in + G * N :].reshape(B, G, N)
+    dt_t = jax.nn.softplus(dt[:, 0] + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * a)  # (B, H)
+    B_h = jnp.repeat(B_, hg, axis=1)  # (B, H, N)
+    C_h = jnp.repeat(C_, hg, axis=1)
+    dx = xs * dt_t[..., None]  # (B, H, P)
+    new_state = decay[..., None, None] * state["state"] + jnp.einsum(
+        "bhp,bhn->bhpn", dx.astype(jnp.float32), B_h.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C_h.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    out = _gated_norm(y, z, p["gn_w"]) @ p["out_proj"]
+    return out, {"state": new_state, "conv": conv_in[:, 1:]}
+
+
+def ssm_reference(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Naive token-by-token recurrence — oracle for the chunked path."""
+    B, S, d = x.shape
+    st = ssm_state_init(cfg, B)
+    outs = []
+    for t in range(S):
+        o, st = ssm_step(p, cfg, x[:, t : t + 1], st)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,18 @@
+from repro.optim.adamw import (
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+
+__all__ = [
+    "OptConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "cosine_schedule",
+    "wsd_schedule",
+]

@@ -1,0 +1,30 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 min_frac=0.01):
+    """Warmup -> stable plateau -> sharp exponential-ish decay (MiniCPM)."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        d_prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (min_frac ** d_prog)
+        return jnp.where(
+            step < warmup, warm, jnp.where(step < warmup + stable, base_lr, dec)
+        )
+
+    return lr

@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + decode with per-family caches.
+
+The cache layout is family-specific and chosen by the model:
+  * dense/GQA  — (B, S, Hkv, dh) K/V per layer,
+  * SWA        — ring buffer of ``window`` slots (O(1) memory in context),
+  * MLA        — latent (r_kv + rope) cache (DeepSeek-V3's memory win),
+  * SSM        — (B, H, P, N) state + conv tail (O(1)),
+  * enc-dec    — decoder self cache + precomputed cross K/V.
+
+Decode runs a jitted one-token step; sampling is greedy or temperature.
+Batch slots finish independently (EOS mask) — a light continuous-batching
+scheme where finished slots keep stepping on padding until the wave drains
+(slot re-fill is the serving-frontend's job, out of scope here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import axes as AX
+from repro.distributed import sharding as SH
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None):
+        self.cfg, self.params, self.sc, self.mesh = cfg, params, sc, mesh
+        if mesh is not None:
+            with mesh, AX.policy(mesh):
+                self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+                self._decode = jax.jit(
+                    lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+                )
+        else:
+            self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+            self._decode = jax.jit(
+                lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+            )
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1].astype(jnp.float32)
+        if self.sc.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.sc.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def _grow_cache(self, caches, batch: int, prompt_len: int):
+        """Pad prefill caches out to max_len slots (static decode shapes)."""
+        full = M.init_cache(self.cfg, batch, self.sc.max_len)
+
+        def fit(small, big):
+            if small.shape == big.shape:
+                return small.astype(big.dtype)
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), (0,) * big.ndim
+            )
+
+        return jax.tree.map(fit, caches, full)
+
+    def generate(self, batch: Dict, max_new_tokens: int = 32) -> np.ndarray:
+        """batch: prompt inputs (tokens (B, S) + frontend extras)."""
+        cfg, sc = self.cfg, self.sc
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        assert S + max_new_tokens <= sc.max_len, "increase ServeConfig.max_len"
+        logits, caches = self._prefill(self.params, batch)
+        caches = self._grow_cache(caches, B, S)
+        key = jax.random.PRNGKey(sc.seed)
+        out = []
+        done = jnp.zeros((B,), bool)
+        tok = self._sample(logits, key)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            if sc.eos_id is not None:
+                done = done | (tok == sc.eos_id)
+                if bool(done.all()):
+                    break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(
+                self.params, caches, tok[:, None], jnp.int32(S + i)
+            )
+            tok = self._sample(logits, sub)
+        return np.stack([np.asarray(t) for t in out], axis=1)

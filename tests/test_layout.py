@@ -1,0 +1,76 @@
+"""Property tests for the BWMA layout itself (the paper's core object)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (
+    BlockLayout,
+    blockwise_1d_view,
+    from_blockwise,
+    to_blockwise,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    bm=st.sampled_from([4, 8, 16]),
+    bn=st.sampled_from([4, 8, 16]),
+)
+def test_roundtrip_property(m, n, bm, bn):
+    """from_blockwise(to_blockwise(x)) == x for any shape/block combo."""
+    lo = BlockLayout(bm, bn)
+    x = np.random.default_rng(m * 71 + n).standard_normal((m, n)).astype(np.float32)
+    xb = to_blockwise(jnp.asarray(x), lo)
+    assert xb.shape == lo.blocked_shape((m, n))
+    back = from_blockwise(xb, lo, (m, n))
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gm=st.integers(1, 4), gn=st.integers(1, 4), bm=st.sampled_from([4, 8])
+)
+def test_blocks_are_contiguous_in_memory(gm, gn, bm):
+    """The defining property (paper Fig. 4d): block (i, j) occupies one
+    contiguous range of the stored 1-D array."""
+    lo = BlockLayout(bm, bm)
+    m, n = gm * bm, gn * bm
+    x = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    xb = np.asarray(to_blockwise(jnp.asarray(x), lo))
+    flat = blockwise_1d_view(xb)
+    for i in range(gm):
+        for j in range(gn):
+            start = (i * gn + j) * bm * bm
+            blk = flat[start : start + bm * bm].reshape(bm, bm)
+            np.testing.assert_array_equal(
+                blk, x[i * bm : (i + 1) * bm, j * bm : (j + 1) * bm]
+            )
+
+
+def test_row_major_is_not_blockwise():
+    """RWMA (row-major) interleaves blocks — the property above must FAIL for
+    the plain array, otherwise the two arrangements would be identical."""
+    m = n = 8
+    x = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    flat_rwma = x.reshape(-1)
+    blk = flat_rwma[:16].reshape(4, 4)
+    assert not np.array_equal(blk, x[:4, :4])
+
+
+def test_padding_cropped():
+    lo = BlockLayout(16, 16)
+    x = jnp.ones((10, 20))
+    xb = to_blockwise(x, lo)
+    assert xb.shape == (1, 2, 16, 16)
+    assert float(jnp.sum(xb)) == 200.0  # padding is zeros
+    back = from_blockwise(xb, lo, (10, 20))
+    assert back.shape == (10, 20)
+
+
+def test_bad_block_rejected():
+    with pytest.raises(ValueError):
+        BlockLayout(0, 4)

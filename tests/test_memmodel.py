@@ -1,0 +1,75 @@
+"""Memory-model invariants + reproduction of the paper's headline effects."""
+import numpy as np
+import pytest
+
+from repro.core import memmodel as mm
+
+SMALL = mm.WorkloadConfig(seq=128, d_model=192, n_heads=3, d_head=64, d_ff=768)
+
+
+def test_gemm_trace_bytes_equal_between_layouts():
+    """Both arrangements move the same data (same tiles, same elements) —
+    only the ORDER differs.  Total line-visits must match."""
+    ta, _ = mm.gemm_trace(64, 64, 64, 16, "rwma", 1, 0, 1 << 22, 2 << 22)
+    tb, _ = mm.gemm_trace(64, 64, 64, 16, "bwma", 1, 0, 1 << 22, 2 << 22)
+    # same number of tile loads x (lines per tile may differ by layout
+    # granularity but total unique lines per matrix are equal)
+    assert len(np.unique(ta)) == len(np.unique(tb))
+
+
+def test_bwma_trace_is_more_sequential():
+    ta, _ = mm.gemm_trace(128, 128, 128, 16, "rwma", 1, 0, 1 << 22, 2 << 22)
+    tb, _ = mm.gemm_trace(128, 128, 128, 16, "bwma", 1, 0, 1 << 22, 2 << 22)
+    seq_r = mm._sequential(ta).mean()
+    seq_b = mm._sequential(tb).mean()
+    assert seq_b > seq_r  # the defining property of the arrangement
+
+
+def test_dm_cache_sim_basics():
+    # repeated access to one line: 1 miss then hits
+    lines = np.zeros(100, dtype=np.int64)
+    miss = mm._dm_miss(lines, 32 * 1024)
+    assert miss.sum() == 1
+    # streaming distinct lines: all miss
+    lines = np.arange(10_000, dtype=np.int64)
+    assert mm._dm_miss(lines, 32 * 1024).sum() == 10_000
+
+
+def test_paper_effects_small_workload():
+    """Direction of every headline result on a reduced BERT layer:
+    speedup > 1, fewer L1 misses, fewer L2 accesses, non-GEMM share grows."""
+    accel = mm.AccelSpec.sa(16)
+    r = mm.simulate_layer(SMALL, accel, "rwma")
+    b = mm.simulate_layer(SMALL, accel, "bwma")
+    assert r["total"].cycles > b["total"].cycles  # speedup
+    assert r["total"].l1_misses > b["total"].l1_misses
+    assert r["total"].l2_accesses > b["total"].l2_accesses
+    ng_r = sum(r[c].cycles for c in mm.NON_GEMM_COMPONENTS) / r["total"].cycles
+    ng_b = sum(b[c].cycles for c in mm.NON_GEMM_COMPONENTS) / b["total"].cycles
+    assert ng_b > ng_r  # paper Fig. 7: non-GEMM share rises under BWMA
+
+
+def test_multicore_scales_and_preserves_win():
+    accel = mm.AccelSpec.sa(16)
+    c1 = mm.simulate_layer(SMALL, accel, "bwma", cores=1)["total"].cycles
+    c2 = mm.simulate_layer(SMALL, accel, "bwma", cores=2)["total"].cycles
+    assert c2 < c1  # more cores help
+    r2 = mm.simulate_layer(SMALL, accel, "rwma", cores=2)["total"].cycles
+    b2 = mm.simulate_layer(SMALL, accel, "bwma", cores=2)["total"].cycles
+    assert b2 < r2  # BWMA wins at every core count (paper Fig. 6b)
+
+
+def test_conversion_overhead_is_negligible():
+    """Paper §3.2: RWMA<->BWMA conversion ~0.1% of a 12-layer model."""
+    frac = mm.conversion_overhead_fraction(SMALL, mm.AccelSpec.sa(16))
+    assert frac < 0.01
+
+
+@pytest.mark.slow
+def test_paper_full_workload_speedup_band():
+    """Full BERT-base layer (paper §4.1): single-core speedups must land in
+    the paper's reported neighbourhood (2.3x-2.8x, we accept 1.8x-3.8x for
+    the rebuilt instrument; see EXPERIMENTS.md for the calibration notes)."""
+    wl = mm.WorkloadConfig()
+    s = mm.speedup(wl, mm.AccelSpec.sa(16))
+    assert 1.8 < s < 3.8
