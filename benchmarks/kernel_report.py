@@ -13,6 +13,7 @@ import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core import blockwise as bw
+from repro.core.backend import resolve_backend
 from repro.core.layout import BlockLayout, to_blockwise
 
 
@@ -37,7 +38,7 @@ def dma_descriptors(block_shape, array_shape, esize=2):
     return 1
 
 
-def run(scale: float = 1.0):
+def run(scale: float = 1.0, backend: str = "reference"):
     print("# kernel report: DMA contiguity + VMEM per BlockSpec step")
     bm = bk = bn = 128
     M = K = N = 1024
@@ -53,18 +54,28 @@ def run(scale: float = 1.0):
     emit("kernel/vmem_working_set_bytes", 0.0,
          f"{vmem} ({vmem/2**20:.2f} MiB of ~16 MiB)")
 
-    # pure-jnp blocked ops wall time (XLA:CPU; relative signal only)
+    # blocked GEMM wall time through the selected execution backend
+    # ("reference" = pure-jnp on XLA:CPU; "pallas" = the BWMA kernels,
+    # interpret mode off-TPU — a dispatch/correctness signal there).
+    be = resolve_backend(backend)
     lo = BlockLayout(128, 128)
     m = int(512 * max(scale, 0.25))
     a = jax.random.normal(jax.random.PRNGKey(0), (m, 768))
     b = jax.random.normal(jax.random.PRNGKey(1), (768, 768))
     ab, bb = bw.block(a, lo), bw.block(b, lo)
-    f_b = jax.jit(lambda x, y: bw.bw_matmul(x, y).data)
+    f_b = jax.jit(lambda x, y: be.matmul(x, y).data)
     _, us_b = timed(lambda: np.asarray(f_b(ab, bb)))
     f_r = jax.jit(lambda x, y: x @ y)
     _, us_r = timed(lambda: np.asarray(f_r(a, b)))
-    emit("kernel/bw_matmul_xla_cpu", us_b, f"rwma_jnp={us_r:.0f}us")
+    emit(f"kernel/bw_matmul_{be.name}", us_b, f"rwma_jnp={us_r:.0f}us")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--backend", default="reference",
+                    help="execution backend: reference | pallas")
+    args = ap.parse_args()
+    run(scale=args.scale, backend=args.backend)

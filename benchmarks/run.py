@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus # section headers).
   fig8  — memory accesses per level (paper Fig. 8)
   conversion — RWMA<->BWMA conversion overhead (paper §3.2)
   kernel_report — Pallas DMA-contiguity / VMEM structure (TPU adaptation)
+  backend_parity — blocked encoder through each execution backend
   roofline — summary of dry-run roofline terms, if artifacts exist
 """
 import argparse
@@ -22,6 +23,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
+        backend_parity,
         conversion_overhead,
         fig6a_accelerators,
         fig6b_cores,
@@ -37,6 +39,7 @@ def main() -> None:
         "fig8": fig8_memaccess.run,
         "conversion": conversion_overhead.run,
         "kernel_report": kernel_report.run,
+        "backend_parity": backend_parity.run,
     }
     for name, fn in sections.items():
         if args.only and name not in args.only:

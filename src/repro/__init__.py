@@ -1,0 +1,7 @@
+"""BWMA reproduction: accelerator-driven block-wise data arrangement.
+
+Package layout (see README.md for the map): ``core`` holds the paper's
+layout/blockwise/encoder/memmodel machinery, ``kernels`` the Pallas BWMA
+kernels, and the remaining subpackages the production-scale system around
+them (models, distributed, serving, training).
+"""

@@ -26,11 +26,11 @@ def full_config() -> ModelConfig:
 def smoke_config() -> ModelConfig:
     return ModelConfig(
         name=ARCH_ID + "-smoke", family="moe",
-        n_layers=3, d_model=96, n_heads=4, n_kv_heads=4, d_head=24,
-        d_ff=128, vocab_size=512,
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_head=24,
+        d_ff=96, vocab_size=256,
         attn_type="mla",
-        q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+        q_lora_rank=32, kv_lora_rank=24, qk_nope_dim=16, qk_rope_dim=8,
         v_head_dim=16,
-        n_experts=8, n_shared_experts=1, top_k=2, moe_d_ff=48,
+        n_experts=4, n_shared_experts=1, top_k=2, moe_d_ff=32,
         first_k_dense=1, mtp_depth=1, q_chunk=16,
     )

@@ -105,7 +105,8 @@ def bw_transpose(a: Blocked) -> Blocked:
     numerically it is exactly the logical transpose.
     """
     out = jnp.swapaxes(jnp.swapaxes(a.data, -4, -3), -2, -1)
-    return Blocked(out, (a.shape[1], a.shape[0]), a.layout)
+    lo = BlockLayout(a.layout.bn, a.layout.bm)  # block interior swaps too
+    return Blocked(out, (a.shape[1], a.shape[0]), lo)
 
 
 def bw_softmax(a: Blocked, *, where_extra=None) -> Blocked:
@@ -148,6 +149,41 @@ def bw_layernorm(
     y = y * gamma_blocked[None, :, None, :] + beta_blocked[None, :, None, :]
     y = jnp.where(mask, y, 0.0)
     return Blocked(y, a.shape, a.layout)
+
+
+def bw_attention(q: Blocked, k: Blocked, v: Blocked, *, scale) -> Blocked:
+    """Reference fused attention: softmax(q @ k^T * scale) @ v, blocked.
+
+    Oracle for :func:`repro.kernels.bwma_attention.bwma_attention`; the
+    score matrix is materialized here (it is the point of the kernel that
+    it never is).
+    """
+    scores = bw_scale(bw_matmul(q, bw_transpose(k)), scale)
+    return bw_matmul(bw_softmax(scores), v)
+
+
+def add_head_axis(x: Blocked) -> Blocked:
+    """Insert a broadcasting head axis before the 4 blocked dims."""
+    return Blocked(x.data[..., None, :, :, :, :], x.shape, x.layout)
+
+
+def merge_heads(ctx: Blocked) -> Blocked:
+    """(..., h, gs, gd, b, b) per-head outputs -> (..., gs, h*gd, b, b).
+
+    Stacks the heads along the column-grid axis.  When ``d_head`` is not a
+    block multiple, each head keeps its zero padding *inside* the merged
+    matrix, so the declared logical width is the block-quantized
+    ``h * ceil(d_head / bn) * bn``; the output projection weight must be
+    blocked per-head the same way (see ``encoder.block_layer_params``) so
+    the interior zero columns meet zero rows and cancel in the GEMM.
+    """
+    s, dh = ctx.shape
+    data = ctx.data
+    h = data.shape[-5]
+    dh_padded = data.shape[-3] * data.shape[-1]  # gd * bn
+    data = jnp.moveaxis(data, -5, -4)  # (..., gs, h, gd, b, b)
+    data = data.reshape(*data.shape[:-4], h * data.shape[-3], *data.shape[-2:])
+    return Blocked(data, (s, h * dh_padded), ctx.layout)
 
 
 def block_vector(v: jnp.ndarray, layout: BlockLayout) -> jnp.ndarray:

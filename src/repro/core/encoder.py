@@ -8,20 +8,27 @@ activations) stays blocked.
 Two functionally-identical paths are provided:
 
 * ``encoder_rwma`` — conventional row-major jnp (the paper's baseline),
-* ``encoder_bwma`` — everything through ``repro.core.blockwise`` operators.
+* ``encoder_bwma`` — everything blocked, dispatched through a selectable
+  execution :class:`~repro.core.backend.Backend`:
 
-They must agree to float tolerance (tested); the *performance* difference is
-what ``repro.core.memmodel`` and the Pallas kernels quantify.
+  - ``backend="reference"`` — the pure-jnp blockwise operators,
+  - ``backend="pallas"`` — the Pallas BWMA kernels (compiled on TPU,
+    ``interpret=True`` elsewhere), including the fused attention and the
+    fused GEMM+bias+GELU feed-forward.
+
+All paths must agree to float tolerance (tested); the *performance*
+difference is what ``repro.core.memmodel`` and the Pallas kernels quantify.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import blockwise as bw
+from repro.core.backend import Backend, resolve_backend
 from repro.core.layout import BlockLayout, LayoutPolicy, to_blockwise
 
 
@@ -110,10 +117,18 @@ def block_layer_params(p, cfg: EncoderConfig):
     stored layout of every weight matrix is the accelerator block sequence.
     """
     lo = cfg.layout
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
     out = {}
     for name in ("wq", "wk", "wv"):
         out[name] = to_blockwise(p[name], lo)  # (h, gm, gn, bm, bn)
-    for name in ("wo", "w1", "w2"):
+    # wo is blocked PER HEAD along its row (h*dh) axis: each head's dh rows
+    # are padded to a block multiple independently, so they line up with the
+    # per-head padded columns that merge_heads stacks (interior zeros cancel
+    # in the GEMM).  For dh % block == 0 this is bit-identical to blocking
+    # the (h*dh, d) matrix directly.
+    wo = to_blockwise(p["wo"].reshape(h, dh, d), lo)  # (h, gdh, gd, b, b)
+    out["wo"] = wo.reshape(h * wo.shape[1], *wo.shape[2:])
+    for name in ("w1", "w2"):
         out[name] = to_blockwise(p[name], lo)
     for name in ("b1", "b2", "ln1_g", "ln1_b", "ln2_g", "ln2_b"):
         out[name] = bw.block_vector(p[name], lo)
@@ -124,37 +139,53 @@ def block_params(params, cfg: EncoderConfig):
     return [block_layer_params(p, cfg) for p in params]
 
 
-def encoder_layer_bwma(pb, xb: bw.Blocked, cfg: EncoderConfig) -> bw.Blocked:
+def encoder_layer_bwma(
+    pb,
+    xb: bw.Blocked,
+    cfg: EncoderConfig,
+    backend: Union[str, Backend, None] = None,
+) -> bw.Blocked:
     lo = cfg.layout
     d, dh, f = cfg.d_model, cfg.d_head, cfg.d_ff
-    s = cfg.seq_len
-    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, xb.dtype))
-    heads = []
-    for i in range(cfg.n_heads):
-        wq = bw.Blocked(pb["wq"][i], (d, dh), lo)
-        wk = bw.Blocked(pb["wk"][i], (d, dh), lo)
-        wv = bw.Blocked(pb["wv"][i], (d, dh), lo)
-        q = bw.bw_matmul(xb, wq)
-        k = bw.bw_matmul(xb, wk)
-        v = bw.bw_matmul(xb, wv)
-        scores = bw.bw_scale(bw.bw_matmul(q, bw.bw_transpose(k)), scale)
-        att = bw.bw_softmax(scores)
-        heads.append(bw.bw_matmul(att, v).data)
-    # concat along the block-grid column axis: heads stay blocked.
-    att_all = bw.Blocked(jnp.concatenate(heads, axis=-3), (s, cfg.n_heads * dh), lo)
-    proj = bw.bw_matmul(att_all, bw.Blocked(pb["wo"], (cfg.n_heads * dh, d), lo))
-    x1 = bw.bw_layernorm(bw.bw_add(xb, proj), pb["ln1_g"], pb["ln1_b"])
-    up = bw.bw_bias(bw.bw_matmul(x1, bw.Blocked(pb["w1"], (d, f), lo)), pb["b1"])
-    act = bw.bw_map(up, jax.nn.gelu)  # element-wise: fused, layout-neutral
-    down = bw.bw_bias(bw.bw_matmul(act, bw.Blocked(pb["w2"], (f, d), lo)), pb["b2"])
-    return bw.bw_layernorm(bw.bw_add(x1, down), pb["ln2_g"], pb["ln2_b"])
+    be = resolve_backend(backend)
+    scale = 1.0 / float(dh) ** 0.5  # static: kernels close over it
+    # All heads at once: weights keep their (h, ...) leading dim, the input
+    # gains a broadcasting head axis, and every op below runs as ONE batched
+    # kernel call (vmap collapses the former per-head python loop).
+    xh = bw.add_head_axis(xb)
+    q = be.matmul(xh, bw.Blocked(pb["wq"], (d, dh), lo))  # (..., h, gs, gd, b, b)
+    k = be.matmul(xh, bw.Blocked(pb["wk"], (d, dh), lo))
+    v = be.matmul(xh, bw.Blocked(pb["wv"], (d, dh), lo))
+    # Fused scores -> softmax -> @V: intermediates never leave BWMA order.
+    ctx = be.attention(q, k, v, scale=scale)
+    att_all = bw.merge_heads(ctx)  # (..., gs, h*gd, b, b)
+    proj = be.matmul(att_all, bw.Blocked(pb["wo"], (att_all.shape[1], d), lo))
+    x1 = be.layernorm(be.add(xb, proj), pb["ln1_g"], pb["ln1_b"])
+    # Feed-forward up-projection: GEMM + bias + GELU fused at write-back.
+    act = be.ffn(x1, bw.Blocked(pb["w1"], (d, f), lo), pb["b1"])
+    down = be.bias(be.matmul(act, bw.Blocked(pb["w2"], (f, d), lo)), pb["b2"])
+    return be.layernorm(be.add(x1, down), pb["ln2_g"], pb["ln2_b"])
 
 
-def encoder_bwma(blocked_params, x, cfg: EncoderConfig):
-    """Full encoder: RWMA->BWMA once, N blocked layers, BWMA->RWMA once."""
+def encoder_bwma(
+    blocked_params,
+    x,
+    cfg: EncoderConfig,
+    backend: Union[str, Backend, None] = None,
+    *,
+    interpret: Optional[bool] = None,
+):
+    """Full encoder: RWMA->BWMA once, N blocked layers, BWMA->RWMA once.
+
+    ``backend`` selects the execution path ("reference" | "pallas" | a
+    :class:`Backend` instance); ``interpret`` forces/disables Pallas
+    interpreter mode (default: interpret everywhere but TPU).  ``x`` may
+    carry leading batch dims: ``(..., seq_len, d_model)``.
+    """
+    be = resolve_backend(backend, interpret=interpret)
     xb = bw.block(x, cfg.layout)  # the only input-side conversion
     for pb in blocked_params:
-        xb = encoder_layer_bwma(pb, xb, cfg)
+        xb = encoder_layer_bwma(pb, xb, cfg, be)
     return xb.unblock()  # the only output-side conversion
 
 

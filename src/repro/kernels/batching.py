@@ -1,0 +1,64 @@
+"""Leading-dim (batch / head) support for the Pallas BWMA kernels.
+
+The kernels themselves are written for a single blocked matrix — a 4-D
+``(gm, gn, bm, bn)`` array — because one ``pallas_call`` grid covers one
+logical GEMM/softmax/etc.  A transformer encoder, however, wants to run the
+same kernel across every head (and every batch element) at once.  Rather
+than teaching each kernel's grid about extra axes, we lift them with
+``jax.vmap``: Pallas registers a batching rule for ``pallas_call``, so the
+vmapped kernel becomes a single call with one extra leading grid dimension —
+still one contiguous block DMA per step, which is the property the paper's
+arrangement exists to provide.
+
+:func:`batched_call` is the shared adapter: each operand declares its core
+rank (4 for blocked matrices, 2 for blocked vectors); any leading axes beyond
+that are broadcast together, flattened to one vmap axis, and restored on the
+output.  Operands with no leading axes (weights shared across heads) are
+passed through unbatched (``in_axes=None``), so they are not materialized
+per head.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_call(
+    fn: Callable[..., jnp.ndarray],
+    args: Sequence[jnp.ndarray],
+    core_ndims: Sequence[int],
+) -> jnp.ndarray:
+    """Apply ``fn`` (which expects core-rank operands) over leading dims.
+
+    ``args[i]`` may carry any number of leading axes beyond ``core_ndims[i]``;
+    leading shapes broadcast against each other (numpy rules).  Each
+    non-trivial lead axis becomes one ``vmap`` level, with ``in_axes=None``
+    for operands that lack it — an operand is never physically replicated
+    along an axis it broadcasts over (batched activations do not copy the
+    shared weights).  With no leading axes anywhere this is ``fn(*args)``.
+    """
+    if len(args) != len(core_ndims):
+        raise ValueError(f"{len(args)} args vs {len(core_ndims)} core ranks")
+    leads = [a.shape[: a.ndim - c] for a, c in zip(args, core_ndims)]
+    lead = jnp.broadcast_shapes(*leads)
+    if lead == ():
+        return fn(*args)
+    n = len(lead)
+    keep = [j for j in range(n) if lead[j] != 1]
+    prepped = []
+    present = []  # which kept lead axes each arg actually carries
+    for a, c, ld in zip(args, core_ndims, leads):
+        padded = (1,) * (n - len(ld)) + ld
+        mine = [j for j in keep if padded[j] != 1]
+        core = a.shape[a.ndim - c:]
+        # drop size-1 lead axes: they are pure broadcast (handled by
+        # in_axes=None below), and removing them is a free reshape.
+        prepped.append(a.reshape(tuple(lead[j] for j in mine) + core))
+        present.append(set(mine))
+    f = fn
+    for j in reversed(keep):
+        f = jax.vmap(f, in_axes=tuple(0 if j in p else None for p in present))
+    out = f(*prepped)
+    return out.reshape(lead + out.shape[len(keep):])

@@ -1,0 +1,111 @@
+"""Fused blocked attention: scores -> softmax -> @V in one Pallas kernel.
+
+The paper's §3.2 argument is that every encoder intermediate can stay in the
+accelerator-block arrangement.  The attention inner loop is the strongest
+case: the ``(S, S)`` score matrix never needs to exist in HBM at all.  One
+grid step here owns one *query block-row* and, entirely in VMEM:
+
+1. computes its row of blocked scores against all of K (``q @ k^T``, block
+   by block — each K fetch is one contiguous BWMA burst),
+2. applies the scaled, padding-masked softmax over that row (the same
+   index arithmetic as :mod:`repro.kernels.bwma_softmax`),
+3. multiplies the probabilities into V and writes one blocked output row.
+
+Inputs/outputs are all ``(gs, gd, b, b)`` blocked matrices with logical
+shape ``(seq, d_head)`` — i.e. the exact values the blocked QKV GEMMs
+produce, so the whole attention block is three kernel launches (QKV) plus
+this one, with no rearrangement between them.
+
+Padding semantics match the reference path (:func:`repro.core.blockwise`
+operators): padded *key* positions get probability exactly 0; padded
+*d_head* columns stay exactly 0; padded query rows produce garbage that is
+cropped at unblock time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.blockwise import Blocked
+from repro.kernels.batching import batched_call
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, s_logical: int, scale: float):
+    q = q_ref[0].astype(jnp.float32)  # (gd, bm, bd) — one query block-row
+    k = k_ref[...].astype(jnp.float32)  # (gs, gd, bs, bd) — all of K
+    v = v_ref[...].astype(jnp.float32)  # (gs, gd, bs, bd) — all of V
+    gs, _, bs, _ = k.shape
+    bm = q.shape[1]
+    # blocked score row: scores[j][a, c] = sum_d q[d, a, :] . k[j, d, c, :]
+    s = jnp.einsum("dab,jdcb->jac", q, k) * scale  # (gs, bm, bs)
+    key_idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (gs, bm, bs), 0) * bs
+        + jax.lax.broadcasted_iota(jnp.int32, (gs, bm, bs), 2)
+    )
+    mask = key_idx < s_logical
+    neg = jnp.finfo(jnp.float32).min
+    sm = jnp.where(mask, s, neg)
+    m = jnp.max(sm, axis=(0, 2), keepdims=True)
+    e = jnp.where(mask, jnp.exp(sm - m), 0.0)
+    z = jnp.sum(e, axis=(0, 2), keepdims=True)
+    p = e / jnp.maximum(z, 1e-30)  # (gs, bm, bs)
+    o = jnp.einsum("jac,jdcb->dab", p, v)  # (gd, bm, bd)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def _attention_4d(q, k, v, *, s_logical, scale, interpret):
+    gs, gd, bm, bd = q.shape
+    if k.shape != q.shape or v.shape != q.shape:
+        raise ValueError(f"q/k/v blocked shapes differ: {q.shape} {k.shape} {v.shape}")
+    kernel = functools.partial(_attention_kernel, s_logical=s_logical, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(gs,),
+        in_specs=[
+            pl.BlockSpec((1, gd, bm, bd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((gs, gd, bm, bd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((gs, gd, bm, bd), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gd, bm, bd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def bwma_attention(
+    q,
+    k,
+    v,
+    *,
+    scale: float,
+    s_logical: int | None = None,
+    interpret: bool = False,
+):
+    """softmax(q @ k^T * scale) @ v, entirely in BWMA order.
+
+    q/k/v: ``(..., gs, gd, b, b)`` blocked matrices of logical shape
+    ``(seq, d_head)`` — raw arrays (``s_logical`` required) or
+    :class:`Blocked` wrappers.  Leading dims (batch, heads) broadcast.
+    """
+    wrapped = isinstance(q, Blocked)
+    if wrapped != isinstance(k, Blocked) or wrapped != isinstance(v, Blocked):
+        raise TypeError(
+            "pass q/k/v all as Blocked or all as raw blocked arrays"
+        )
+    qa = q.data if wrapped else q
+    ka = k.data if wrapped else k
+    va = v.data if wrapped else v
+    if s_logical is None:
+        if not wrapped:
+            raise ValueError("s_logical is required for raw blocked arrays")
+        s_logical = q.shape[0]
+    fn = functools.partial(
+        _attention_4d, s_logical=s_logical, scale=scale, interpret=interpret
+    )
+    out = batched_call(fn, (qa, ka, va), (4, 4, 4))
+    if wrapped:
+        return Blocked(out, q.shape, q.layout)
+    return out

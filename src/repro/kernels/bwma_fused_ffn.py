@@ -14,6 +14,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.blockwise import Blocked
+from repro.kernels.batching import batched_call
+
 
 def _ffn_kernel(a_ref, b_ref, bias_ref, o_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -31,15 +34,7 @@ def _ffn_kernel(a_ref, b_ref, bias_ref, o_ref, *, n_k: int):
         o_ref[0, 0] = jax.nn.gelu(o_ref[0, 0] + bias_ref[...].astype(o_ref.dtype))
 
 
-def bwma_fused_ffn(
-    a_blocked: jnp.ndarray,
-    w_blocked: jnp.ndarray,
-    bias_blocked: jnp.ndarray,
-    *,
-    acc_dtype=jnp.float32,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """gelu((gm,gk,bm,bk) @ (gk,gn,bk,bn) + bias(gn,bn)) -> (gm,gn,bm,bn)."""
+def _ffn_4d(a_blocked, w_blocked, bias_blocked, *, acc_dtype, interpret):
     gm, gk, bm, bk = a_blocked.shape
     _, gn, _, bn = w_blocked.shape
     kernel = functools.partial(_ffn_kernel, n_k=gk)
@@ -55,3 +50,32 @@ def bwma_fused_ffn(
         out_shape=jax.ShapeDtypeStruct((gm, gn, bm, bn), acc_dtype),
         interpret=interpret,
     )(a_blocked, w_blocked, bias_blocked)
+
+
+def bwma_fused_ffn(
+    a_blocked,
+    w_blocked,
+    bias_blocked: jnp.ndarray,
+    *,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """gelu((..., gm,gk,bm,bk) @ (gk,gn,bk,bn) + bias(gn,bn)) -> (..., gm,gn,bm,bn).
+
+    Accepts raw blocked arrays or :class:`Blocked` wrappers for the matrix
+    operands; the bias stays a raw blocked vector.  Leading dims on the
+    activation broadcast; the weight/bias are shared.
+    """
+    wrapped = isinstance(a_blocked, Blocked)
+    if wrapped != isinstance(w_blocked, Blocked):
+        raise TypeError(
+            "pass both matrix operands as Blocked or both as raw blocked arrays"
+        )
+    a = a_blocked.data if wrapped else a_blocked
+    w = w_blocked.data if wrapped else w_blocked
+    fn = functools.partial(_ffn_4d, acc_dtype=acc_dtype, interpret=interpret)
+    out = batched_call(fn, (a, w, bias_blocked), (4, 4, 2))
+    if wrapped:
+        out = out.astype(a_blocked.dtype)
+        return Blocked(out, (a_blocked.shape[0], w_blocked.shape[1]), a_blocked.layout)
+    return out

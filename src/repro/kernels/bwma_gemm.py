@@ -19,6 +19,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.blockwise import Blocked
+from repro.kernels.batching import batched_call
+
 
 def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
     """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j] on the MXU."""
@@ -33,14 +36,7 @@ def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
     o_ref[0, 0] += jnp.dot(a, b, preferred_element_type=o_ref.dtype)
 
 
-def bwma_gemm(
-    a_blocked: jnp.ndarray,
-    b_blocked: jnp.ndarray,
-    *,
-    acc_dtype=jnp.float32,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """(gm, gk, bm, bk) @ (gk, gn, bk, bn) -> (gm, gn, bm, bn), blocked."""
+def _gemm_4d(a_blocked, b_blocked, *, acc_dtype, interpret):
     gm, gk, bm, bk = a_blocked.shape
     gk2, gn, bk2, bn = b_blocked.shape
     if (gk, bk) != (gk2, bk2):
@@ -58,4 +54,35 @@ def bwma_gemm(
         out_shape=jax.ShapeDtypeStruct((gm, gn, bm, bn), acc_dtype),
         interpret=interpret,
     )(a_blocked, b_blocked)
+    return out
+
+
+def bwma_gemm(
+    a_blocked,
+    b_blocked,
+    *,
+    acc_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """(..., gm, gk, bm, bk) @ (..., gk, gn, bk, bn) -> (..., gm, gn, bm, bn).
+
+    Accepts raw blocked arrays or :class:`Blocked` wrappers (returned type
+    follows the inputs).  Leading dims (batch, heads) broadcast; weights
+    without leading dims are shared, not replicated.
+    """
+    wrapped = isinstance(a_blocked, Blocked)
+    if wrapped != isinstance(b_blocked, Blocked):
+        raise TypeError(
+            "pass both operands as Blocked or both as raw blocked arrays"
+        )
+    a, b = a_blocked, b_blocked
+    if wrapped:
+        if a.shape[1] != b.shape[0]:
+            raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+        a, b = a_blocked.data, b_blocked.data
+    fn = functools.partial(_gemm_4d, acc_dtype=acc_dtype, interpret=interpret)
+    out = batched_call(fn, (a, b), (4, 4))
+    if wrapped:
+        out = out.astype(a_blocked.dtype)
+        return Blocked(out, (a_blocked.shape[0], b_blocked.shape[1]), a_blocked.layout)
     return out

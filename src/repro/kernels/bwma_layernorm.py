@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.blockwise import Blocked
+from repro.kernels.batching import batched_call
+
 
 def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, n_logical: int, bn: int, eps: float):
     x = x_ref[0].astype(jnp.float32)  # (gn, bm, bn)
@@ -29,15 +32,7 @@ def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, n_logical: int, bn: int, eps: floa
     o_ref[0] = jnp.where(mask, y, 0.0).astype(o_ref.dtype)
 
 
-def bwma_layernorm(
-    x_blocked: jnp.ndarray,
-    gamma_blocked: jnp.ndarray,
-    beta_blocked: jnp.ndarray,
-    n_logical: int,
-    *,
-    eps: float = 1e-5,
-    interpret: bool = False,
-) -> jnp.ndarray:
+def _ln_4d(x_blocked, gamma_blocked, beta_blocked, *, n_logical, eps, interpret):
     gm, gn, bm, bn = x_blocked.shape
     kernel = functools.partial(_ln_kernel, n_logical=n_logical, bn=bn, eps=eps)
     return pl.pallas_call(
@@ -52,3 +47,31 @@ def bwma_layernorm(
         out_shape=jax.ShapeDtypeStruct(x_blocked.shape, x_blocked.dtype),
         interpret=interpret,
     )(x_blocked, gamma_blocked, beta_blocked)
+
+
+def bwma_layernorm(
+    x_blocked,
+    gamma_blocked: jnp.ndarray,
+    beta_blocked: jnp.ndarray,
+    n_logical: int | None = None,
+    *,
+    eps: float = 1e-5,
+    interpret: bool = False,
+):
+    """Row LayerNorm on a (..., gm, gn, bm, bn) blocked matrix.
+
+    gamma/beta are blocked vectors ``(gn, bn)`` shared across all leading
+    dims.  Accepts a raw blocked array (``n_logical`` required) or a
+    :class:`Blocked` wrapper.
+    """
+    wrapped = isinstance(x_blocked, Blocked)
+    x = x_blocked.data if wrapped else x_blocked
+    if n_logical is None:
+        if not wrapped:
+            raise ValueError("n_logical is required for raw blocked arrays")
+        n_logical = x_blocked.shape[1]
+    fn = functools.partial(_ln_4d, n_logical=n_logical, eps=eps, interpret=interpret)
+    out = batched_call(fn, (x, gamma_blocked, beta_blocked), (4, 2, 2))
+    if wrapped:
+        return Blocked(out, x_blocked.shape, x_blocked.layout)
+    return out

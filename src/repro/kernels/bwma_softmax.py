@@ -13,6 +13,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.blockwise import Blocked
+from repro.kernels.batching import batched_call
+
 
 def _softmax_kernel(x_ref, o_ref, *, n_logical: int, bn: int):
     x = x_ref[0]  # (gn, bm, bn)
@@ -30,10 +33,7 @@ def _softmax_kernel(x_ref, o_ref, *, n_logical: int, bn: int):
     o_ref[0] = (e / jnp.maximum(s, 1e-30)).astype(o_ref.dtype)
 
 
-def bwma_softmax(
-    x_blocked: jnp.ndarray, n_logical: int, *, interpret: bool = False
-) -> jnp.ndarray:
-    """Row softmax on a (gm, gn, bm, bn) blocked matrix with logical width n."""
+def _softmax_4d(x_blocked, *, n_logical, interpret):
     gm, gn, bm, bn = x_blocked.shape
     kernel = functools.partial(_softmax_kernel, n_logical=n_logical, bn=bn)
     return pl.pallas_call(
@@ -44,3 +44,22 @@ def bwma_softmax(
         out_shape=jax.ShapeDtypeStruct(x_blocked.shape, x_blocked.dtype),
         interpret=interpret,
     )(x_blocked)
+
+
+def bwma_softmax(x_blocked, n_logical: int | None = None, *, interpret: bool = False):
+    """Row softmax on a (..., gm, gn, bm, bn) blocked matrix, logical width n.
+
+    Accepts a raw blocked array (``n_logical`` required) or a
+    :class:`Blocked` wrapper (``n_logical`` defaults to its logical width).
+    """
+    wrapped = isinstance(x_blocked, Blocked)
+    x = x_blocked.data if wrapped else x_blocked
+    if n_logical is None:
+        if not wrapped:
+            raise ValueError("n_logical is required for raw blocked arrays")
+        n_logical = x_blocked.shape[1]
+    fn = functools.partial(_softmax_4d, n_logical=n_logical, interpret=interpret)
+    out = batched_call(fn, (x,), (4,))
+    if wrapped:
+        return Blocked(out, x_blocked.shape, x_blocked.layout)
+    return out

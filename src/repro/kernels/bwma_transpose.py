@@ -8,17 +8,22 @@ argument; the row-major variant gathers strided columns instead.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.blockwise import Blocked
+from repro.core.layout import BlockLayout
+from repro.kernels.batching import batched_call
 
 
 def _transpose_kernel(a_ref, o_ref):
     o_ref[0, 0] = a_ref[0, 0].T
 
 
-def bwma_transpose(x_blocked: jnp.ndarray, *, interpret: bool = False):
-    """(gm, gn, bm, bn) -> (gn, gm, bn, bm): logical transpose, blocked."""
+def _transpose_4d(x_blocked, *, interpret):
     gm, gn, bm, bn = x_blocked.shape
     return pl.pallas_call(
         _transpose_kernel,
@@ -28,3 +33,16 @@ def bwma_transpose(x_blocked: jnp.ndarray, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((gn, gm, bn, bm), x_blocked.dtype),
         interpret=interpret,
     )(x_blocked)
+
+
+def bwma_transpose(x_blocked, *, interpret: bool = False):
+    """(..., gm, gn, bm, bn) -> (..., gn, gm, bn, bm): logical transpose."""
+    wrapped = isinstance(x_blocked, Blocked)
+    x = x_blocked.data if wrapped else x_blocked
+    out = batched_call(
+        functools.partial(_transpose_4d, interpret=interpret), (x,), (4,)
+    )
+    if wrapped:
+        lo = BlockLayout(x_blocked.layout.bn, x_blocked.layout.bm)
+        return Blocked(out, (x_blocked.shape[1], x_blocked.shape[0]), lo)
+    return out

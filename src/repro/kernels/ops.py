@@ -1,12 +1,19 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public convenience wrappers around the Pallas kernels.
 
-Dispatch policy: on TPU the kernels compile natively; elsewhere (this
-container is CPU-only) they execute in ``interpret=True`` mode, which runs
-the kernel body per grid step in Python — bit-accurate for validation.
+Dispatch policy lives in :class:`repro.core.backend.PallasBackend` (compiled
+natively on TPU, ``interpret=True`` elsewhere); these wrappers delegate to
+the shared, memoized instance from :func:`resolve_backend` so every caller
+hits the same per-shape jit cache.  They also adapt between the logical
+(2-D) world and the blocked (BWMA) world using :mod:`repro.core.layout`,
+carrying the accelerator block size as the layout quantum (the paper's
+'governed by the kernel size').
 
-These wrappers also adapt between the logical (2-D) world and the blocked
-(BWMA) world using :mod:`repro.core.layout`, and carry the accelerator block
-size as the layout quantum (the paper's 'governed by the kernel size').
+Dtype contract: the element-wise-shaped ops (softmax/layernorm/attention)
+preserve the input dtype, matching the backend convention.  The GEMM-shaped
+ops (``blocked_matmul``, ``blocked_ffn``) return the **f32 accumulator**
+unless ``out_dtype`` says otherwise — mixed-precision callers depend on
+that, so they bypass the backend's input-dtype cast and call the kernels
+directly.
 """
 from __future__ import annotations
 
@@ -15,48 +22,52 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import resolve_backend
 from repro.core.blockwise import Blocked
 from repro.core.layout import BlockLayout, from_blockwise, to_blockwise
 from repro.kernels.bwma_fused_ffn import bwma_fused_ffn
 from repro.kernels.bwma_gemm import bwma_gemm
-from repro.kernels.bwma_layernorm import bwma_layernorm
-from repro.kernels.bwma_softmax import bwma_softmax
 from repro.kernels.rwma_gemm import rwma_gemm
 
 
+def _pallas():
+    return resolve_backend("pallas")
+
+
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # one source of truth for the dispatch policy: the shared backend
+    return _pallas().interpret
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def blocked_matmul(a: Blocked, b: Blocked, out_dtype=None) -> Blocked:
-    """BWMA GEMM on Blocked values (the paper's accelerated hot loop)."""
+    """BWMA GEMM; returns the f32 accumulator unless ``out_dtype`` is given."""
     out = bwma_gemm(a.data, b.data, interpret=_interpret())
     if out_dtype is not None:
         out = out.astype(out_dtype)
     return Blocked(out, (a.shape[0], b.shape[1]), a.layout)
 
 
-@jax.jit
 def blocked_softmax(a: Blocked) -> Blocked:
-    out = bwma_softmax(a.data, a.shape[1], interpret=_interpret())
-    return Blocked(out, a.shape, a.layout)
+    return _pallas().softmax(a)
 
 
-@jax.jit
 def blocked_layernorm(a: Blocked, gamma_blocked, beta_blocked) -> Blocked:
-    out = bwma_layernorm(
-        a.data, gamma_blocked, beta_blocked, a.shape[1], interpret=_interpret()
-    )
-    return Blocked(out, a.shape, a.layout)
+    return _pallas().layernorm(a, gamma_blocked, beta_blocked)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def blocked_ffn(a: Blocked, w: Blocked, bias_blocked, out_dtype=None) -> Blocked:
+    """Fused GEMM+bias+GELU; f32 accumulator unless ``out_dtype`` is given."""
     out = bwma_fused_ffn(a.data, w.data, bias_blocked, interpret=_interpret())
     if out_dtype is not None:
         out = out.astype(out_dtype)
     return Blocked(out, (a.shape[0], w.shape[1]), a.layout)
+
+
+def blocked_attention(q: Blocked, k: Blocked, v: Blocked, *, scale: float) -> Blocked:
+    """Fused softmax(q @ k^T * scale) @ v without leaving BWMA order."""
+    return _pallas().attention(q, k, v, scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))

@@ -113,6 +113,46 @@ def test_bwma_fused_ffn_sweep(m, k, n):
     )
 
 
+@pytest.mark.parametrize("s,dh", [(32, 16), (48, 32), (45, 20)])
+def test_bwma_attention_sweep(s, dh):
+    """Fused scores->softmax->@V vs the composed oracle, incl. ragged s/dh."""
+    from repro.kernels.bwma_attention import bwma_attention
+
+    lo = BlockLayout(16, 16)
+    scale = 1.0 / dh ** 0.5
+    q = jax.random.normal(jax.random.PRNGKey(20), (s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(21), (s, dh))
+    v = jax.random.normal(jax.random.PRNGKey(22), (s, dh))
+    out = bwma_attention(
+        to_blockwise(q, lo), to_blockwise(k, lo), to_blockwise(v, lo),
+        scale=scale, s_logical=s, interpret=True,
+    )
+    got = from_blockwise(out, lo, (s, dh))
+    want = ref.softmax_ref(q @ k.T * scale) @ v
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kernels_accept_blocked_and_leading_dims():
+    """Kernels take Blocked wrappers and batch/head leading dims directly."""
+    lo = BlockLayout(16, 16)
+    x = jax.random.normal(jax.random.PRNGKey(23), (2, 3, 40, 48))
+    w = jax.random.normal(jax.random.PRNGKey(24), (48, 32))
+    xb = bw.block(x, lo)  # data (2, 3, gm, gn, 16, 16)
+    wb = bw.block(w, lo)
+    out = bwma_gemm(xb, wb, interpret=True)
+    assert isinstance(out, bw.Blocked) and out.shape == (40, 32)
+    assert out.data.shape[:2] == (2, 3)
+    want = np.einsum("...mk,kn->...mn", np.asarray(x), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(out.unblock()), want,
+                               rtol=2e-5, atol=2e-5)
+    sm = bwma_softmax(xb, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(sm.unblock()), np.asarray(ref.softmax_ref(x)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
 @pytest.mark.parametrize("m,n", [(32, 32), (48, 80), (16, 128)])
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_bwma_transpose_sweep(m, n, dtype):

@@ -7,16 +7,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 import repro.configs as C
 from repro.configs.shapes import cache_specs, input_specs
 from repro.distributed import sharding as SH
+from repro.distributed.axes import abstract_mesh
 from repro.models import model as M
 
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": abstract_mesh((16, 16), ("data", "model")),
+    "multi": abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
