@@ -30,6 +30,7 @@ def main() -> None:
         fig7_breakdown,
         fig8_memaccess,
         kernel_report,
+        serve_throughput,
     )
 
     sections = {
@@ -40,6 +41,7 @@ def main() -> None:
         "conversion": conversion_overhead.run,
         "kernel_report": kernel_report.run,
         "backend_parity": backend_parity.run,
+        "serve_throughput": serve_throughput.run,
     }
     for name, fn in sections.items():
         if args.only and name not in args.only:

@@ -1,4 +1,13 @@
-"""Serving entry point: batched generation with the family-specific cache.
+"""Serving entry point: continuous batching over the block-paged KV cache.
+
+Multi-request workload (Poisson-ish staggered arrivals, fixed seeds):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
+      --num-requests 6 --max-seqs 2 --prompt-len 12 --max-new 16 \
+      --mean-interarrival 4 --page-size 8
+
+Legacy single-wave batched generation (also the path for MLA / enc-dec /
+frontend models, which the paged engine does not serve yet):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
       --batch 4 --prompt-len 16 --max-new 32
@@ -10,26 +19,23 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as C
-from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
-from repro.serve import ServeConfig, Server
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    ServeConfig,
+    Server,
+    frontend_extras,
+    make_requests,
+    run_static_waves,
+)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=C.arch_ids())
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    cfg = C.get_config(args.arch, smoke=args.smoke,
-                       dtype=jnp.float32 if args.smoke else jnp.bfloat16)
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+def run_single_wave(cfg, params, args):
+    """Legacy path: one batch, one wave (works for every cache family)."""
     srv = Server(
         cfg, params,
         ServeConfig(max_len=args.prompt_len + args.max_new + 8,
@@ -38,25 +44,98 @@ def main():
     toks = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )
-    batch = {"tokens": toks}
-    if cfg.frontend == "vision":
-        batch["vis_embeds"] = jnp.zeros(
-            (args.batch, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype
-        )
-        batch["positions3"] = jnp.broadcast_to(
-            jnp.arange(args.prompt_len, dtype=jnp.int32)[None, None],
-            (3, args.batch, args.prompt_len),
-        )
-    if cfg.frontend == "audio":
-        batch["audio_embeds"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype
-        )
+    batch = frontend_extras(cfg, {"tokens": toks}, args.batch, args.prompt_len)
     t0 = time.time()
     out = srv.generate(batch, max_new_tokens=args.max_new)
     dt = time.time() - t0
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({out.size / dt:.1f} tok/s incl. compile)")
     print(out[:, :16])
+
+
+def run_workload(cfg, params, args):
+    """Multi-request workload through the selected engine(s)."""
+    reqs = make_requests(
+        cfg.vocab_size, args.num_requests,
+        prompt_len=args.prompt_len, max_new=args.max_new,
+        mean_interarrival=args.mean_interarrival, seed=args.seed,
+    )
+    max_len = args.prompt_len + args.max_new + 1
+    useful = sum(r["max_new_tokens"] for r in reqs)
+
+    if args.engine in ("static", "both"):
+        srv = Server(cfg, params, ServeConfig(
+            max_len=max_len, temperature=args.temperature, seed=args.seed,
+        ))
+        t0 = time.time()
+        outs = run_static_waves(srv, reqs, args.max_seqs)
+        dt = time.time() - t0
+        print(f"[static-wave]  {len(outs)} requests, {useful} tokens in "
+              f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile)")
+
+    if args.engine in ("continuous", "both"):
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=args.max_seqs, max_len=max_len,
+            page_size=args.page_size, num_pages=args.num_pages,
+            temperature=args.temperature, seed=args.seed,
+        ))
+        for r in reqs:
+            eng.submit(r["prompt"], r["max_new_tokens"],
+                       rid=r["rid"], arrival_step=r["arrival_step"])
+        t0 = time.time()
+        done = eng.run()
+        dt = time.time() - t0
+        print(f"[continuous]   {len(done)} requests, {useful} tokens in "
+              f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile); "
+              f"page={eng.kv.page_size} pool={eng.kv.allocator.num_pages} "
+              f"cache={eng.kv.cache_bytes() / 1e6:.2f} MB")
+        print("  rid arrive admit queue ttft_ms preempt  tok/s  n_tok")
+        for r in done:
+            s = r.stats
+            print(f"  {r.rid:3d} {s.arrival_step:6d} {s.admitted_step:5d} "
+                  f"{s.queue_steps:5d} {s.ttft_s * 1e3:7.1f} "
+                  f"{s.n_preemptions:7d} {s.decode_tok_s(len(r.out_tokens)):6.1f} "
+                  f"{len(r.out_tokens):6d}")
+        print(f"  engine steps={eng.step_count} decode_steps={eng.decode_steps} "
+              f"prefill_tokens={eng.prefill_tokens}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=C.arch_ids())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="legacy single-wave batch size (--num-requests 0)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--num-requests", type=int, default=0,
+                    help="> 0 switches to the multi-request workload path")
+    ap.add_argument("--engine", choices=("static", "continuous", "both"),
+                    default="continuous")
+    ap.add_argument("--max-seqs", type=int, default=4,
+                    help="concurrent batch slots (workload path)")
+    ap.add_argument("--mean-interarrival", type=float, default=4.0,
+                    help="mean request inter-arrival gap in decode steps")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens; 0 derives from cfg.block")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="physical page pool size; 0 sizes for max_seqs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch, smoke=args.smoke,
+                       dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if args.num_requests > 0:
+        if args.engine != "static" and not M.supports_paged_decode(cfg):
+            raise SystemExit(
+                f"{args.arch}: continuous batching not supported for this "
+                "family yet; rerun with --engine static"
+            )
+        run_workload(cfg, params, args)
+    else:
+        run_single_wave(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -139,6 +139,101 @@ def gqa_forward(
 
 
 # --------------------------------------------------------------------------
+# Paged GQA decode (block-paged KV cache, page size = accelerator block)
+# --------------------------------------------------------------------------
+
+def paged_cache_init(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict:
+    """One layer's share of the physical page pool.
+
+    Pages are the accelerator-block-sized unit of cache memory (the paper's
+    arrangement quantum applied to the KV cache): page ``i`` of this layer
+    holds ``page_size`` contiguous token slots.  Physical page ids are shared
+    across layers — a request's page table indexes every layer's pool with
+    the same ids.  Page 0 is reserved as the null page (write target for
+    inactive slots, gather target for unmapped table entries).
+    """
+    dh = cfg.d_head
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, dh), cfg.dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, dh), cfg.dtype),
+    }
+
+
+def gqa_paged_decode(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, d) — one token per slot
+    positions: jnp.ndarray,  # (B, 1) per-slot absolute positions (RoPE)
+    cache: Dict,  # {"k_pages", "v_pages"} (num_pages, page, Hkv, dh)
+    page_table: jnp.ndarray,  # (B, max_pages) physical page per logical page
+    seq_pos: jnp.ndarray,  # (B,) absolute position of the new token
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against the block-paged cache.
+
+    Write: the new K/V lands in page ``page_table[b, pos // page]`` at offset
+    ``pos % page``.  Read: gather each slot's logical pages back into order
+    and run the same masked one-token attention as the linear cache — keys
+    beyond ``seq_pos`` (tail of a partial page, unmapped null-page entries,
+    stale pages of retired requests) are masked exactly like empty slots.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    page = cache["k_pages"].shape[1]
+    logical = seq_pos // page  # (B,) logical page of the new token
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    off = seq_pos % page
+    # scatter the new token (inactive slots carry page_table rows of 0 and
+    # seq_pos 0, so their writes land in the reserved null page)
+    k_pages = cache["k_pages"].at[phys, off].set(k[:, 0])
+    v_pages = cache["v_pages"].at[phys, off].set(v[:, 0])
+    # gather-based attention: logical-order pages -> (B, max_pages*page, ...)
+    kg = k_pages[page_table]  # (B, max_pages, page, Hkv, dh)
+    vg = v_pages[page_table]
+    maxp = page_table.shape[1]
+    kg = kg.reshape(B, maxp * page, cfg.n_kv_heads, cfg.d_head)
+    vg = vg.reshape(B, maxp * page, cfg.n_kv_heads, cfg.d_head)
+    # gathered keys sit at their absolute positions by construction
+    k_positions = jnp.broadcast_to(
+        jnp.arange(maxp * page, dtype=jnp.int32)[None], (B, maxp * page)
+    )
+    out = decode_attention(q, kg, vg, k_positions, seq_pos, window=None)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return dense(cfg, out, p["wo"]), {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def gqa_ring_decode(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, d)
+    positions: jnp.ndarray,  # (B, 1)
+    cache: Dict,  # {"k", "v", "pos"} — (B, slots, ...) ring buffer
+    seq_pos: jnp.ndarray,  # (B,) absolute position of the new token
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Per-slot-position decode against the O(window) ring buffer (SWA).
+
+    Same layout as the static-wave ring (token at absolute position p sits in
+    slot p % slots) but each batch slot advances independently, which is what
+    continuous batching needs.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    slots = cache["k"].shape[1]
+    slot = seq_pos % slots  # (B,)
+    rows = jnp.arange(B)
+    k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+    v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+    pos_cache = cache["pos"].at[rows, slot].set(seq_pos)
+    out = decode_attention(q, k_cache, v_cache, pos_cache, seq_pos, window=window)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    return dense(cfg, out, p["wo"]), new_cache
+
+
+# --------------------------------------------------------------------------
 # MLA (DeepSeek-V3)
 # --------------------------------------------------------------------------
 

@@ -56,6 +56,8 @@ def dense(cfg: ModelConfig, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """
     if cfg.gemm_backend == "xla" or w.ndim != 2:
         return x @ w
+    from repro.core import blockwise as bw
+    from repro.core.backend import resolve_backend
     from repro.core.layout import BlockLayout
     from repro.kernels import ops as kops
 
@@ -64,16 +66,21 @@ def dense(cfg: ModelConfig, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     blk = min(cfg.block, *x2.shape, *w.shape)
     blk = max(8, blk)
     if cfg.gemm_backend == "bwma":
-        out = kops.matmul_bwma_2d(x2, w, BlockLayout(blk, blk))
+        # the shared, memoized Pallas backend: its per-operator jit caches
+        # persist across layers/steps, so the whole model zoo reuses one
+        # compiled kernel per shape instead of re-tracing each call
+        layout = BlockLayout(blk, blk)
+        out = resolve_backend("pallas").matmul(
+            bw.block(x2, layout), bw.block(w, layout)
+        ).unblock()
     else:  # rwma
         m, k = x2.shape
         n = w.shape[1]
         if m % blk or k % blk or n % blk:
             out = x2 @ w  # row-major kernel needs divisible shapes
         else:
-            from repro.kernels.rwma_gemm import rwma_gemm
-            out = rwma_gemm(x2, w, bm=blk, bk=blk, bn=blk,
-                            interpret=jax.default_backend() != "tpu")
+            # memoized jit wrapper sharing the backend's dispatch policy
+            out = kops.matmul_rwma(x2, w, bm=blk, bk=blk, bn=blk)
     return out.astype(x.dtype).reshape(*lead, w.shape[1])
 
 
@@ -198,7 +205,7 @@ def decode_attention(
     k_cache: jnp.ndarray,  # (B, Sc, Hkv, Dq)
     v_cache: jnp.ndarray,  # (B, Sc, Hkv, Dv)
     k_positions: jnp.ndarray,  # (B, Sc) absolute positions; -1 = empty slot
-    q_pos,  # scalar absolute position of the new token
+    q_pos,  # absolute position of the new token: scalar or (B,) per slot
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
@@ -214,9 +221,13 @@ def decode_attention(
         "bhgd,bkhd->bhgk", qi, k_cache,
         preferred_element_type=jnp.float32,  # see chunked_attention note
     ) * scale
-    valid = (k_positions >= 0) & (k_positions <= q_pos)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 0:  # one shared position (static-wave decode)
+        q_pos = jnp.broadcast_to(q_pos, (B,))
+    qp = q_pos[:, None]  # (B, 1) — per-slot positions (continuous batching)
+    valid = (k_positions >= 0) & (k_positions <= qp)
     if window is not None:
-        valid = valid & (q_pos - k_positions < window)
+        valid = valid & (qp - k_positions < window)
     s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)

@@ -73,6 +73,8 @@ def layer_forward(
     mode: str,
     cache: Optional[Dict],
     pos_offset,
+    seq_pos=None,  # (B,) per-slot absolute positions (continuous batching)
+    page_table=None,  # (B, max_pages) physical page ids (paged KV cache)
 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
@@ -91,6 +93,18 @@ def layer_forward(
             p["attn"], cfg, h, positions, mode=mode,
             cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
         )
+    elif mode == "decode" and seq_pos is not None:
+        # per-slot cache interface: block-paged (full attention) or ring (SWA)
+        c_attn = cache.get("attn") if cache else None
+        if c_attn is not None and "k_pages" in c_attn:
+            a_out, a_cache = attn.gqa_paged_decode(
+                p["attn"], cfg, h, positions, c_attn, page_table, seq_pos
+            )
+        else:
+            a_out, a_cache = attn.gqa_ring_decode(
+                p["attn"], cfg, h, positions, c_attn, seq_pos,
+                window=cfg.window if cfg.attn_type == "swa" else None,
+            )
     else:
         a_out, a_cache = attn.gqa_forward(
             p["attn"], cfg, h, positions, mode=mode,
@@ -159,6 +173,73 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
             ),
         }
     return segs
+
+
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Families the continuous-batching engine can serve today.
+
+    Dense/GQA attention goes through the block-paged cache; SWA and SSM keep
+    their O(window)/O(1) layouts behind the same per-slot interface.  MLA,
+    encoder-decoder, and the modality frontends still need the static-wave
+    engine (their caches are not per-slot addressable yet).
+    """
+    return (
+        cfg.attn_type != "mla"
+        and cfg.n_encoder_layers == 0
+        and cfg.frontend == "none"
+        and not cfg.mrope_sections
+    )
+
+
+def init_paged_cache(
+    cfg: ModelConfig, max_seqs: int, num_pages: int, page_size: int, max_len: int
+):
+    """Stacked-per-segment decode cache for the continuous-batching engine.
+
+    Full-attention layers share one physical page pool per layer (page ids
+    are pool-wide, see :func:`repro.models.attention.paged_cache_init`); SWA
+    rings and SSM states are per-slot (``max_seqs`` rows).
+    """
+    if not supports_paged_decode(cfg):
+        raise NotImplementedError(
+            f"paged decode not supported for {cfg.name} "
+            f"(attn_type={cfg.attn_type}, frontend={cfg.frontend})"
+        )
+    segs = {}
+    for si, (kind, n) in enumerate(layer_segments(cfg)):
+        c: Dict[str, Any] = {}
+        if kind in ("dense", "moe", "hybrid"):
+            if cfg.attn_type == "swa":
+                c["attn"] = attn.gqa_cache_init(
+                    cfg, max_seqs, max_len, window_only=True
+                )
+            else:
+                c["attn"] = attn.paged_cache_init(cfg, num_pages, page_size)
+        if kind in ("ssm", "hybrid"):
+            c["ssm"] = ssmm.ssm_state_init(cfg, max_seqs)
+        segs[f"seg{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c
+        )
+    return segs
+
+
+def decode_step_paged(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table):
+    """One continuous-batching decode step (all slots advance together).
+
+    tokens: (B, 1) int32 — last sampled token per slot (0 for idle slots);
+    seq_pos: (B,) int32 — absolute position the new token occupies (0 idle);
+    page_table: (B, max_pages) int32 — physical page per logical page (idle
+    and unmapped entries point at the reserved null page 0).
+    Returns (logits (B, 1, V), new caches).
+    """
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = seq_pos[:, None]  # (B, 1) per-slot RoPE positions
+    h, new_caches, _ = _run_segments(
+        cfg, params, h, positions, mode="decode", caches=caches,
+        pos_offset=0, remat=False, seq_pos=seq_pos, page_table=page_table,
+    )
+    h = apply_norm(cfg, params["final_norm"], h)
+    return _lm_logits(cfg, params, h), new_caches
 
 
 # --------------------------------------------------------------------------
@@ -244,7 +325,7 @@ def _embed_inputs(cfg: ModelConfig, params, batch: Dict) -> Tuple[jnp.ndarray, A
 
 def _run_segments(
     cfg: ModelConfig, params, h, positions, *, mode: str, caches=None,
-    pos_offset=0, remat: bool = False,
+    pos_offset=0, remat: bool = False, seq_pos=None, page_table=None,
 ):
     """Scan each stacked segment; returns (h, new_caches, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
@@ -260,6 +341,7 @@ def _run_segments(
             x, c_new, aux = layer_forward(
                 cfg, _kind, p_layer, x, positions,
                 mode=mode, cache=c_layer, pos_offset=pos_offset,
+                seq_pos=seq_pos, page_table=page_table,
             )
             if c_new is None:
                 c_new = 0  # scan needs a consistent pytree; 0 = no cache

@@ -1,3 +1,27 @@
-from repro.serve.engine import ServeConfig, Server
+from repro.serve.engine import (
+    Engine,
+    EngineConfig,
+    ServeConfig,
+    Server,
+    frontend_extras,
+    make_requests,
+    run_static_waves,
+)
+from repro.serve.kvcache import PageAllocator, PagedCacheConfig, PagedKVCache
+from repro.serve.scheduler import Request, RequestStats, Scheduler
 
-__all__ = ["ServeConfig", "Server"]
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "PageAllocator",
+    "PagedCacheConfig",
+    "PagedKVCache",
+    "Request",
+    "RequestStats",
+    "Scheduler",
+    "ServeConfig",
+    "Server",
+    "frontend_extras",
+    "make_requests",
+    "run_static_waves",
+]

@@ -1,21 +1,30 @@
-"""Batched serving engine: prefill + decode with per-family caches.
+"""Serving engines: static-wave batching and continuous batching.
 
-The cache layout is family-specific and chosen by the model:
-  * dense/GQA  — (B, S, Hkv, dh) K/V per layer,
-  * SWA        — ring buffer of ``window`` slots (O(1) memory in context),
-  * MLA        — latent (r_kv + rope) cache (DeepSeek-V3's memory win),
-  * SSM        — (B, H, P, N) state + conv tail (O(1)),
-  * enc-dec    — decoder self cache + precomputed cross K/V.
+Two engines share the model's prefill/decode functions:
 
-Decode runs a jitted one-token step; sampling is greedy or temperature.
-Batch slots finish independently (EOS mask) — a light continuous-batching
-scheme where finished slots keep stepping on padding until the wave drains
-(slot re-fill is the serving-frontend's job, out of scope here).
+* :class:`Server` — the original **static-wave** engine: one batch of
+  requests prefills together, decodes in lockstep, and the wave drains
+  before the next starts.  Finished slots keep stepping on padding.  Kept as
+  the baseline the continuous engine is benchmarked against.
+* :class:`Engine` — **continuous batching** over the block-paged KV cache
+  (:mod:`repro.serve.kvcache`): a scheduler admits requests from a queue
+  into batch slots as pages free up, each slot advances at its own position,
+  and a finished slot is re-filled the same step.  The decode step is one
+  jitted function of static shape ``(max_seqs, 1)``; prefill is jitted per
+  distinct prompt length (exact shapes keep SWA/SSM prefill semantics exact
+  — padding a prompt would corrupt ring packing and SSM final states).
+
+Cache families: dense/GQA attention decodes by gather over pages whose size
+is the accelerator kernel block; SWA and SSM keep their O(window)/O(1)
+layouts behind the same per-slot interface.  MLA and encoder-decoder still
+require :class:`Server`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +32,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed import axes as AX
-from repro.distributed import sharding as SH
 from repro.models import model as M
+from repro.serve.kvcache import PagedCacheConfig, PagedKVCache
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -35,7 +45,50 @@ class ServeConfig:
     seed: int = 0
 
 
+# jitted step functions are memoized per (hashable, frozen) ModelConfig so
+# every engine instance — and repeated benchmark constructions — share one
+# compile cache; the mesh path builds its own closures under the mesh context
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg: ModelConfig):
+    return jax.jit(functools.partial(M.prefill, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg: ModelConfig):
+    return jax.jit(functools.partial(M.decode_step, cfg))
+
+
+def _paged_step(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table):
+    logits, new_caches = M.decode_step_paged(
+        cfg, params, caches, tokens, seq_pos, page_table
+    )
+    # greedy argmax on-device (same fp32 math as Server._sample): the
+    # continuous engine must sync every step to make scheduling
+    # decisions, so keep that sync to one small (B,) transfer
+    greedy = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)
+    return greedy.astype(jnp.int32), logits, new_caches
+
+
+def _donate_caches() -> tuple:
+    # donate the cache pytree (arg 1 of _paged_step after cfg binds): the
+    # page pool is the dominant buffer and the engine always replaces its
+    # reference with the step's output, so the update must happen in place —
+    # without donation every token would copy (and briefly double) the whole
+    # multi-layer pool.  CPU has no donation support (XLA warns and copies
+    # anyway), so only ask where it works.
+    return (1,) if jax.default_backend() != "cpu" else ()
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_paged_fn(cfg: ModelConfig):
+    return jax.jit(
+        functools.partial(_paged_step, cfg), donate_argnums=_donate_caches()
+    )
+
+
 class Server:
+    """Static-wave batched generation (the pre-paging baseline engine)."""
+
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None):
         self.cfg, self.params, self.sc, self.mesh = cfg, params, sc, mesh
         if mesh is not None:
@@ -45,10 +98,8 @@ class Server:
                     lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
                 )
         else:
-            self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
-            self._decode = jax.jit(
-                lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
-            )
+            self._prefill = _prefill_fn(cfg)
+            self._decode = _decode_fn(cfg)
 
     def _sample(self, logits, key):
         logits = logits[:, -1].astype(jnp.float32)
@@ -82,7 +133,9 @@ class Server:
         key = jax.random.PRNGKey(sc.seed)
         out = []
         done = jnp.zeros((B,), bool)
-        tok = self._sample(logits, key)
+        # split BEFORE the first sample so no key is ever used twice
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
         for i in range(max_new_tokens):
             out.append(tok)
             if sc.eos_id is not None:
@@ -95,3 +148,304 @@ class Server:
             )
             tok = self._sample(logits, sub)
         return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Continuous batching over the block-paged cache
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Continuous-batching engine knobs.
+
+    ``page_size=0`` derives the page from ``cfg.block`` (the accelerator
+    kernel block governs the cache arrangement); ``num_pages=0`` sizes the
+    pool for ``max_seqs`` full-length sequences.
+    """
+
+    max_seqs: int = 4
+    max_len: int = 128  # per-request capacity (prompt + generation)
+    page_size: int = 0
+    num_pages: int = 0
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class Engine:
+    """Continuous-batching serving engine (scheduler + paged KV cache)."""
+
+    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, mesh=None):
+        if not M.supports_paged_decode(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: continuous batching serves dense/GQA, SWA and "
+                "SSM families; use Server for MLA/enc-dec/frontend models"
+            )
+        self.cfg, self.params, self.ec, self.mesh = cfg, params, ec, mesh
+        self.kv = PagedKVCache(cfg, PagedCacheConfig(
+            max_seqs=ec.max_seqs, max_len=ec.max_len,
+            page_size=ec.page_size, num_pages=ec.num_pages,
+        ))
+        self.sched = Scheduler(self.kv, ec.max_seqs)
+
+        if mesh is not None:
+            # per-instance closures: jit must trace under the mesh context
+            with mesh, AX.policy(mesh):
+                self._prefill = jax.jit(functools.partial(M.prefill, cfg))
+                self._decode = jax.jit(
+                    functools.partial(_paged_step, cfg),
+                    donate_argnums=_donate_caches(),
+                )
+        else:
+            self._prefill = _prefill_fn(cfg)
+            self._decode = _decode_paged_fn(cfg)
+        # per-slot last sampled token, kept ON DEVICE: the greedy loop feeds
+        # decode outputs straight back in, syncing to host only at
+        # scheduling events (finish, preemption, EOS, temperature sampling)
+        self._last_tok = jnp.zeros((ec.max_seqs,), jnp.int32)
+        # deferred token log: (device (B,) greedy tokens, [(slot, req), ...])
+        self._pending: List[tuple] = []
+        self._rid_counter = 0
+        self.step_count = 0
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        *,
+        rid: Optional[int] = None,
+        arrival_step: int = 0,
+    ) -> Request:
+        if rid is None:
+            rid = self._rid_counter
+        self._rid_counter = max(self._rid_counter, rid) + 1
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            arrival_step=arrival_step,
+        )
+        self.sched.submit(req)
+        return req
+
+    # -- sampling -----------------------------------------------------------
+
+    def _sample(self, row_logits: jnp.ndarray, req: Request) -> int:
+        """Sample one token from a (V,) logits row (fp32, greedy or temp)."""
+        lf = row_logits.astype(jnp.float32)
+        if self.ec.temperature <= 0:
+            return int(jnp.argmax(lf))
+        # per-request, per-position key: independent of scheduling order
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.ec.seed), req.rid),
+            len(req.out_tokens),
+        )
+        return int(jax.random.categorical(key, lf / self.ec.temperature))
+
+    def _append_token(self, slot: int, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        self._last_tok = self._last_tok.at[slot].set(tok)
+        if req.stats.first_token_step < 0:
+            req.stats.first_token_step = self.step_count
+            req.stats.t_first_token = time.perf_counter()
+        if req.done or (self.ec.eos_id is not None and tok == self.ec.eos_id):
+            self.sched.finish(slot, self.step_count)
+
+    def _flush_pending(self) -> None:
+        """Materialize the deferred on-device tokens into out_tokens.
+
+        All logged arrays are already computed (or in flight) on the device,
+        so this drains the async queue once instead of once per step."""
+        if not self._pending:
+            return
+        rows = np.stack([np.asarray(g) for g, _ in self._pending])
+        for row, (_, running) in zip(rows, self._pending):
+            for slot, req in running:
+                req.out_tokens.append(int(row[slot]))
+                req.n_pending -= 1
+        self._pending.clear()
+
+    # -- engine steps -------------------------------------------------------
+
+    def _admit_and_prefill(self) -> None:
+        for slot, req in self.sched.admit(self.step_count):
+            prompt = req.effective_prompt
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompt)[None]}
+            )
+            self.kv.install_prefill(slot, caches, len(prompt))
+            self.prefill_tokens += len(prompt)
+            self._append_token(slot, req, self._sample(logits[0, -1], req))
+
+    def _decode_once(self) -> None:
+        running = self.sched.running
+        if running and sum(
+            self.kv.growth_deficit(slot, req.next_pos) for slot, req in running
+        ) > self.kv.num_free_pages:
+            # the growth round below may preempt: victims must carry their
+            # full token history back to the queue, so sync first
+            self._flush_pending()
+        self.sched.grow_for_decode(self.step_count)
+        running = self.sched.running
+        if not running:
+            return
+        seq_pos = np.zeros((self.ec.max_seqs,), np.int32)  # idle slots -> 0
+        for slot, req in running:
+            seq_pos[slot] = req.next_pos
+        greedy, logits, self.kv.data = self._decode(
+            self.params, self.kv.data, self._last_tok[:, None],
+            jnp.asarray(seq_pos), self.kv.page_table(),
+        )
+        self.decode_steps += 1
+        if self.ec.temperature > 0:
+            # host sampling needs the logits now — no deferral on this path
+            for slot, req in running:
+                self._append_token(slot, req, self._sample(logits[slot, -1], req))
+            return
+        self._last_tok = greedy  # feed back on-device; no host round-trip
+        self._pending.append((greedy, running))
+        for slot, req in running:
+            req.n_pending += 1
+        if self.ec.eos_id is not None:
+            # early-stop decisions need token values every step
+            self._flush_pending()
+            for slot, req in running:
+                if req.state == "running" and (
+                    req.done or req.out_tokens[-1] == self.ec.eos_id
+                ):
+                    self.sched.finish(slot, self.step_count)
+            return
+        # max_new completion is pure length bookkeeping: no sync needed
+        for slot, req in running:
+            if req.done:
+                self.sched.finish(slot, self.step_count)
+
+    def step(self) -> None:
+        """One engine iteration: arrivals -> admissions (prefill) -> decode."""
+        self.sched.poll_arrivals(self.step_count)
+        self._admit_and_prefill()
+        self._decode_once()
+        self.step_count += 1
+
+    def run(self, max_steps: int = 1_000_000) -> List[Request]:
+        """Drive until every submitted request finishes; returns the
+        requests that finished during THIS call (rid order, stats
+        populated) — a reused engine doesn't re-report earlier batches."""
+        already = set(self.sched.finished)
+        while self.sched.has_work():
+            if self.step_count >= max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+            before = self.step_count
+            self.step()
+            assert self.step_count > before
+        self._flush_pending()
+        return [
+            self.sched.finished[rid]
+            for rid in sorted(set(self.sched.finished) - already)
+        ]
+
+    # -- convenience --------------------------------------------------------
+
+    def generate(self, batch: Dict, max_new_tokens: int = 32) -> np.ndarray:
+        """Drop-in for Server.generate: all prompts arrive at step 0.
+
+        With ``eos_id`` set, requests that stop early are right-padded with
+        the eos token so the result stays rectangular.
+        """
+        tokens = np.asarray(batch["tokens"])
+        for b in range(tokens.shape[0]):
+            self.submit(tokens[b], max_new_tokens)
+        reqs = self.run()
+        # always exactly max_new columns so downstream indexing never
+        # changes shape between batches (Server can return fewer only when
+        # every slot eos-stops early)
+        pad = self.ec.eos_id if self.ec.eos_id is not None else 0
+        out = np.full((len(reqs), max_new_tokens), pad, np.int32)
+        for i, r in enumerate(reqs):
+            toks = r.out_tokens[:max_new_tokens]
+            out[i, : len(toks)] = toks
+        return out
+
+
+def frontend_extras(cfg: ModelConfig, batch: Dict, B: int, S: int) -> Dict:
+    """Stub modality inputs (zero embeddings) for vision/audio frontends."""
+    if cfg.frontend == "vision":
+        batch["vis_embeds"] = jnp.zeros(
+            (B, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype
+        )
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
+        )
+    if cfg.frontend == "audio":
+        batch["audio_embeds"] = jnp.zeros(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+def run_static_waves(
+    server: Server, requests: Sequence[dict], max_seqs: int
+) -> Dict[int, np.ndarray]:
+    """Drive the static-wave :class:`Server` over a multi-request workload.
+
+    The pre-paging serving story: requests are grouped in arrival order into
+    waves of ``max_seqs``; each wave prefills together and decodes in
+    lockstep for the wave's **longest** generation length (finished slots
+    burn decode steps on padding), and the next wave waits for the drain.
+    Used as the baseline in ``benchmarks/serve_throughput.py``.
+
+    Requests must share one prompt length (the static engine has no ragged
+    batching).  Returns {rid: generated tokens, trimmed to the request's own
+    ``max_new_tokens``}.
+    """
+    order = sorted(requests, key=lambda r: (r["arrival_step"], r["rid"]))
+    lens = {len(r["prompt"]) for r in order}
+    if len(lens) > 1:
+        raise ValueError(f"static waves need one prompt length, got {sorted(lens)}")
+    outs: Dict[int, np.ndarray] = {}
+    for w in range(0, len(order), max_seqs):
+        wave = order[w : w + max_seqs]
+        toks = jnp.asarray(np.stack([r["prompt"] for r in wave]))
+        batch = frontend_extras(
+            server.cfg, {"tokens": toks}, toks.shape[0], toks.shape[1]
+        )
+        out = server.generate(batch, max(r["max_new_tokens"] for r in wave))
+        for r, row in zip(wave, out):
+            outs[r["rid"]] = np.asarray(row[: r["max_new_tokens"]], np.int32)
+    return outs
+
+
+def make_requests(
+    vocab_size: int,
+    num_requests: int,
+    *,
+    prompt_len: int = 16,
+    max_new: int = 32,
+    mean_interarrival: float = 0.0,
+    vary_lengths: bool = True,
+    seed: int = 0,
+) -> List[dict]:
+    """Deterministic 'Poisson-ish' smoke workload: exponential inter-arrival
+    gaps (in decode-step units) and per-request generation lengths, all from
+    one seeded generator.  Returns plain dicts so both engines can consume."""
+    rng = np.random.default_rng(seed)
+    reqs, step = [], 0
+    for i in range(num_requests):
+        if i and mean_interarrival > 0:
+            step += int(rng.exponential(mean_interarrival))
+        # generation lengths spread over [2, max_new]: realistic serving
+        # traffic is length-heterogeneous, which is precisely what lockstep
+        # waves pay for and slot re-fill does not
+        n_new = (
+            int(rng.integers(2, max_new + 1)) if vary_lengths else max_new
+        )
+        reqs.append({
+            "rid": i,
+            "prompt": rng.integers(0, vocab_size, size=(prompt_len,)).astype(np.int32),
+            "max_new_tokens": n_new,
+            "arrival_step": step,
+        })
+    return reqs

@@ -1,0 +1,246 @@
+"""Block-paged KV-cache manager: the paper's arrangement applied to serving.
+
+The paper's thesis is that data should live in memory in the units the
+accelerator kernel consumes.  During decode the dominant traffic is the KV
+cache, so this module stores it as **pages** of ``page_size`` token slots,
+where ``page_size`` defaults to the accelerator kernel block (``cfg.block``)
+— one page is exactly the contiguous region a blocked attention kernel
+streams per grid step.  Physical pages live in one pool per layer and are
+handed to requests through:
+
+* a **free-list allocator** (page 0 is reserved as the null page — the write
+  target for idle batch slots and the gather target for unmapped entries),
+* **per-request page tables** mapping logical pages (position // page_size)
+  to physical pages, gathered back into logical order at attention time
+  (:func:`repro.models.attention.gqa_paged_decode`).
+
+Cache families that already have O(1)-in-context layouts keep them behind
+the same slot interface: SWA rings and SSM states are per-slot rows, written
+at admission and advanced per-slot by the batched decode step.
+
+Host-side bookkeeping (free list, page tables, per-slot lengths) is numpy;
+device state is a pytree produced by :func:`repro.models.model.init_paged_cache`
+that the engine threads through its jitted decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+NULL_PAGE = 0  # reserved physical page: idle-slot writes, unmapped gathers
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Sizing of the paged cache pool.
+
+    ``page_size=0`` derives the page from the accelerator kernel block
+    (``cfg.block``) — the paper's 'governed by the kernel size'.
+    ``num_pages=0`` sizes the pool so every slot can reach ``max_len``
+    (plus the null page); smaller values exercise admission control and
+    preemption.
+    """
+
+    max_seqs: int = 4
+    max_len: int = 128  # per-sequence token capacity (rounded up to pages)
+    page_size: int = 0
+    num_pages: int = 0
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids [1, num_pages)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (one real + null page)")
+        self.num_pages = num_pages
+        # LIFO free list: recently released (hot) pages are reused first
+        self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no change) if the pool is short."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        return got
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (NULL_PAGE < p < self.num_pages):
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+class PagedKVCache:
+    """Device cache pool + host page tables for the continuous-batching engine."""
+
+    def __init__(self, cfg: ModelConfig, pc: PagedCacheConfig):
+        if not M.supports_paged_decode(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving supports dense/GQA, SWA and SSM "
+                f"families (attn_type={cfg.attn_type!r}, "
+                f"frontend={cfg.frontend!r} not yet)"
+            )
+        self.cfg = cfg
+        self.page_size = pc.page_size or cfg.block
+        self.max_seqs = pc.max_seqs
+        self.max_pages_per_seq = max(1, math.ceil(pc.max_len / self.page_size))
+        self.max_len = self.max_pages_per_seq * self.page_size
+        num_pages = pc.num_pages or (pc.max_seqs * self.max_pages_per_seq + 1)
+        self.allocator = PageAllocator(num_pages)
+        self.data = M.init_paged_cache(
+            cfg, pc.max_seqs, num_pages, self.page_size, self.max_len
+        )
+        # host-side page tables; unmapped entries point at the null page
+        self._table = np.zeros((pc.max_seqs, self.max_pages_per_seq), np.int32)
+        self._table_dev: Optional[jnp.ndarray] = None
+        self._pages: Dict[int, List[int]] = {}  # slot -> physical pages
+
+    # -- accounting ---------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    @property
+    def num_free_pages(self) -> int:
+        return self.allocator.num_free
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Admission control: room for the prompt plus the first decode page."""
+        return self.allocator.num_free >= self.pages_for(prompt_len + 1)
+
+    def fits(self, total_len: int) -> bool:
+        """Whether a request of this total length can ever be served."""
+        return (
+            total_len <= self.max_len
+            and self.pages_for(total_len) <= self.allocator.num_pages - 1
+        )
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    def admit(self, slot: int, prompt_len: int) -> bool:
+        """Allocate pages + table row for a prompt.  False if pool is short."""
+        assert slot not in self._pages, f"slot {slot} already occupied"
+        pages = self.allocator.alloc(self.pages_for(prompt_len + 1))
+        if pages is None:
+            return False
+        self._pages[slot] = pages
+        row = np.zeros((self.max_pages_per_seq,), np.int32)
+        row[: len(pages)] = pages
+        self._table[slot] = row
+        self._table_dev = None
+        return True
+
+    def ensure_capacity(self, slot: int, next_pos: int) -> bool:
+        """Grow the slot's mapping so position ``next_pos`` is writable.
+
+        Allocates on demand, one page at a time (the vLLM discipline).
+        Returns False on OOM — the scheduler then preempts somebody.
+        """
+        pages = self._pages[slot]
+        needed = next_pos // self.page_size + 1
+        if needed > self.max_pages_per_seq:
+            raise ValueError(
+                f"slot {slot}: position {next_pos} exceeds max_len {self.max_len}"
+            )
+        while len(pages) < needed:
+            got = self.allocator.alloc(1)
+            if got is None:
+                return False
+            self._table[slot, len(pages)] = got[0]
+            pages.extend(got)
+            self._table_dev = None
+        return True
+
+    def growth_deficit(self, slot: int, next_pos: int) -> int:
+        """Pages the slot still needs to make ``next_pos`` writable (no
+        allocation).  Lets the engine predict whether the coming growth
+        round can OOM (and so whether a preemption flush is needed)."""
+        needed = next_pos // self.page_size + 1
+        return max(0, needed - len(self._pages[slot]))
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages to the pool (finish or preemption)."""
+        pages = self._pages.pop(slot, None)
+        if pages:
+            self.allocator.free(pages)
+        self._table[slot] = NULL_PAGE
+        self._table_dev = None
+
+    def page_table(self) -> jnp.ndarray:
+        """Device mirror of the page tables (re-uploaded only when dirty)."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+        return self._table_dev
+
+    # -- prefill install ----------------------------------------------------
+
+    def install_prefill(self, slot: int, prefill_caches, prompt_len: int) -> None:
+        """Write one request's prefill caches into its slot.
+
+        ``prefill_caches`` is the (batch=1) pytree from ``M.prefill``: paged
+        segments scatter their K/V into the slot's physical pages; SWA rings
+        and SSM states copy into the slot's row.  Idempotent per slot — a
+        re-admitted (preempted) request simply overwrites.
+        """
+        for si, (kind, _n) in enumerate(M.layer_segments(self.cfg)):
+            seg = f"seg{si}"
+            dst, src = self.data[seg], prefill_caches[seg]
+            if "attn" in dst:
+                if "k_pages" in dst["attn"]:
+                    self._install_paged(slot, dst["attn"], src["attn"], prompt_len)
+                else:
+                    self._install_ring(slot, dst["attn"], src["attn"])
+            if "ssm" in dst:
+                for key in ("state", "conv"):
+                    dst["ssm"][key] = dst["ssm"][key].at[:, slot].set(
+                        src["ssm"][key][:, 0]
+                    )
+
+    def _install_paged(self, slot: int, dst, src, prompt_len: int) -> None:
+        page = self.page_size
+        n_pages = self.pages_for(prompt_len)
+        phys = jnp.asarray(self._pages[slot][:n_pages])
+        pad = n_pages * page - prompt_len
+        for name in ("k", "v"):
+            x = src[name][:, 0]  # (L, S, Hkv, dh)
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            L = x.shape[0]
+            xb = x.reshape(L, n_pages, page, *x.shape[2:])
+            dst[f"{name}_pages"] = dst[f"{name}_pages"].at[:, phys].set(xb)
+
+    def _install_ring(self, slot: int, dst, src) -> None:
+        slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
+        got = src["k"].shape[2]  # prefill ring length: min(window, S)
+        assert got <= slots_e, (got, slots_e)
+        # token at absolute position p lives in ring slot p % slots_e; the
+        # prefill packing already satisfies this for got == window (== slots_e)
+        # and trivially for S < window (identity placement, see attention.py)
+        for name, empty in (("k", 0.0), ("v", 0.0), ("pos", -1)):
+            L = dst[name].shape[0]
+            row_shape = (L,) + dst[name].shape[2:]
+            row = jnp.full(row_shape, empty, dst[name].dtype)
+            row = row.at[:, :got].set(src[name][:, 0])
+            dst[name] = dst[name].at[:, slot].set(row)
+
+    # -- stats --------------------------------------------------------------
+
+    def cache_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))

@@ -1,0 +1,234 @@
+"""Continuous-batching scheduler: queue, admission, preemption, slot re-fill.
+
+The scheduler owns request lifecycle and the mapping requests -> batch slots;
+the :class:`~repro.serve.kvcache.PagedKVCache` owns pages.  Policy:
+
+* **FIFO admission** with head-of-line blocking: requests are admitted in
+  arrival order, each only when a batch slot is free AND the free-page
+  budget covers its prompt plus one decode page (no over-subscription at
+  admit time; growth is on-demand).
+* **On-demand growth**: before every decode step each running slot's page
+  table is extended to cover the token about to be written.
+* **LIFO preemption**: when growth hits an empty pool, the most recently
+  admitted request is preempted — its pages are released and it re-enters
+  the *front* of the queue with its generated tokens kept, to be recomputed
+  (prompt + generated so far are re-prefilled on re-admission).
+* **Slot re-fill**: a finished or preempted request frees its slot the same
+  step; the next admission can land in it immediately.
+
+Per-request stats (queue steps, TTFT, decode tok/s) accumulate on the
+:class:`Request` so the launch driver and benchmarks can report latency
+percentiles without instrumenting the engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Step- and wall-clock timings for one request.
+
+    Wall times are recorded at bookkeeping time: with the engine's deferred
+    host sync the device may still be draining enqueued steps, so per-request
+    ``decode_tok_s`` measures enqueue rate; workload-level tokens/s (useful
+    tokens / engine wall) is the throughput headline.
+    """
+
+    arrival_step: int = 0
+    admitted_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
+    t_arrival: float = 0.0
+    t_admitted: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+    n_preemptions: int = 0
+
+    @property
+    def queue_steps(self) -> int:
+        return self.admitted_step - self.arrival_step
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.t_arrival
+
+    def decode_tok_s(self, n_generated: int) -> float:
+        dt = self.t_finish - self.t_first_token
+        return (n_generated - 1) / dt if dt > 0 and n_generated > 1 else float("inf")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request flowing through the engine."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    arrival_step: int = 0
+    state: str = "pending"  # pending | waiting | running | finished
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    # tokens generated on-device but not yet copied to out_tokens: the
+    # engine defers host syncs between scheduling events, so length
+    # bookkeeping must count them (values arrive at the next flush)
+    n_pending: int = 0
+    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.out_tokens) + self.n_pending
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """Prompt for (re-)prefill: original + tokens generated pre-preemption."""
+        assert self.n_pending == 0, "flush pending tokens before re-prefill"
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)]
+        )
+
+    @property
+    def next_pos(self) -> int:
+        """Absolute position the next decode step writes for this request
+        (the last generated token's position)."""
+        return self.prompt_len + self.n_generated - 1
+
+    @property
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new_tokens
+
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+class Scheduler:
+    """Drives request state against the paged cache's page budget."""
+
+    def __init__(self, kv, max_seqs: int):
+        self.kv = kv
+        self.max_seqs = max_seqs
+        self.pending: List[Request] = []  # not yet arrived (simulated clock)
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * max_seqs
+        self._admit_order: List[int] = []  # slots by admission recency
+        self.finished: Dict[int, Request] = {}
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        known = (
+            {r.rid for r in self.pending}
+            | {r.rid for r in self.queue}
+            | {r.rid for r in self.slots if r is not None}
+            | set(self.finished)
+        )
+        if req.rid in known:
+            raise ValueError(f"duplicate request id {req.rid}")
+        if not self.kv.fits(req.total_len()):
+            raise ValueError(
+                f"request {req.rid}: {req.total_len()} tokens can never fit "
+                f"(max_len {self.kv.max_len}, pool "
+                f"{self.kv.allocator.num_pages - 1} pages)"
+            )
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: (r.arrival_step, r.rid))
+
+    def poll_arrivals(self, step: int) -> None:
+        """Move requests whose simulated arrival step has come into the queue."""
+        now = time.perf_counter()
+        while self.pending and self.pending[0].arrival_step <= step:
+            req = self.pending.pop(0)
+            req.state = "waiting"
+            req.stats.arrival_step = req.arrival_step
+            req.stats.t_arrival = now
+            self.queue.append(req)
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, step: int) -> List[Tuple[int, Request]]:
+        """Admit queue-head requests while slots and pages allow (FIFO)."""
+        admitted = []
+        while self.queue:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if not free:
+                break
+            req = self.queue[0]
+            if not self.kv.can_admit(len(req.effective_prompt)):
+                break  # head-of-line blocks: preserves FIFO fairness
+            self.queue.popleft()
+            slot = free[0]
+            ok = self.kv.admit(slot, len(req.effective_prompt))
+            assert ok, "can_admit passed but admit failed"
+            self.slots[slot] = req
+            self._admit_order.append(slot)
+            req.state = "running"
+            now = time.perf_counter()
+            if req.stats.admitted_step < 0:
+                req.stats.admitted_step = step
+                req.stats.t_admitted = now
+            admitted.append((slot, req))
+        return admitted
+
+    # -- growth / preemption ------------------------------------------------
+
+    def grow_for_decode(self, step: int) -> List[Request]:
+        """Ensure every running slot can write its next token; preempt LIFO
+        on OOM.  Returns the requests preempted this step."""
+        preempted: List[Request] = []
+        for slot in list(self._admit_order):  # oldest first get pages first
+            req = self.slots[slot]
+            if req is None:
+                continue
+            while not self.kv.ensure_capacity(slot, req.next_pos):
+                victim_slot = self._admit_order[-1]  # youngest
+                victim = self.preempt(victim_slot, step)
+                preempted.append(victim)
+                if victim_slot == slot:
+                    break  # the needy slot preempted itself
+        return preempted
+
+    def preempt(self, slot: int, step: int) -> Request:
+        req = self.slots[slot]
+        assert req is not None
+        self.kv.release(slot)
+        self.slots[slot] = None
+        self._admit_order.remove(slot)
+        req.state = "waiting"
+        req.stats.n_preemptions += 1
+        self.queue.appendleft(req)  # preempted requests resume first
+        return req
+
+    # -- completion ---------------------------------------------------------
+
+    def finish(self, slot: int, step: int) -> Request:
+        req = self.slots[slot]
+        assert req is not None
+        self.kv.release(slot)
+        self.slots[slot] = None
+        self._admit_order.remove(slot)
+        req.state = "finished"
+        req.stats.finish_step = step
+        req.stats.t_finish = time.perf_counter()
+        self.finished[req.rid] = req
+        return req
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def running(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.pending or self.queue or any(
+            r is not None for r in self.slots
+        ))
