@@ -78,6 +78,9 @@ def run_workload(cfg, params, args):
             max_seqs=args.max_seqs, max_len=max_len,
             page_size=args.page_size, num_pages=args.num_pages,
             temperature=args.temperature, seed=args.seed,
+            chunked_prefill=not args.no_chunked_prefill,
+            prefill_chunk=args.prefill_chunk,
+            prefill_chunks_per_step=args.prefill_chunks_per_step,
         ))
         for r in reqs:
             eng.submit(r["prompt"], r["max_new_tokens"],
@@ -85,10 +88,14 @@ def run_workload(cfg, params, args):
         t0 = time.time()
         done = eng.run()
         dt = time.time() - t0
+        mode = ("chunked prefill "
+                f"(chunk={eng.chunk_size} tok, "
+                f"{eng.ec.prefill_chunks_per_step} chunks/step)"
+                if eng.ec.chunked_prefill else "one-shot prefill")
         print(f"[continuous]   {len(done)} requests, {useful} tokens in "
               f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile); "
               f"page={eng.kv.page_size} pool={eng.kv.allocator.num_pages} "
-              f"cache={eng.kv.cache_bytes() / 1e6:.2f} MB")
+              f"cache={eng.kv.cache_bytes() / 1e6:.2f} MB, {mode}")
         print("  rid arrive admit queue ttft_ms preempt  tok/s  n_tok")
         for r in done:
             s = r.stats
@@ -121,6 +128,15 @@ def main():
                     help="KV page size in tokens; 0 derives from cfg.block")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="physical page pool size; 0 sizes for max_seqs")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-admission chunk in tokens; 0 derives one "
+                         "page (SSD-grid-aligned for SSM models)")
+    ap.add_argument("--prefill-chunks-per-step", type=int, default=4,
+                    help="prompt chunks admitted per engine step before the "
+                         "decode batch steps (latency/throughput knob)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="one-shot prefill per admission (the pre-chunking "
+                         "behavior; still installed via donating jit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -167,6 +167,7 @@ def gqa_paged_decode(
     cache: Dict,  # {"k_pages", "v_pages"} (num_pages, page, Hkv, dh)
     page_table: jnp.ndarray,  # (B, max_pages) physical page per logical page
     seq_pos: jnp.ndarray,  # (B,) absolute position of the new token
+    active: Optional[jnp.ndarray] = None,  # (B,) slots actually decoding
 ) -> Tuple[jnp.ndarray, Dict]:
     """One-token decode against the block-paged cache.
 
@@ -175,6 +176,11 @@ def gqa_paged_decode(
     and run the same masked one-token attention as the linear cache — keys
     beyond ``seq_pos`` (tail of a partial page, unmapped null-page entries,
     stale pages of retired requests) are masked exactly like empty slots.
+
+    ``active`` marks slots whose write should land: inactive slots (idle,
+    or mid-way through a chunked prefill — whose page table rows are live!)
+    are routed to the reserved null page so the lockstep batch step cannot
+    corrupt state it does not own.
     """
     B, S, _ = x.shape
     assert S == 1
@@ -182,6 +188,8 @@ def gqa_paged_decode(
     page = cache["k_pages"].shape[1]
     logical = seq_pos // page  # (B,) logical page of the new token
     phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, 0)  # null page absorbs idle writes
     off = seq_pos % page
     # scatter the new token (inactive slots carry page_table rows of 0 and
     # seq_pos 0, so their writes land in the reserved null page)
@@ -202,6 +210,96 @@ def gqa_paged_decode(
     return dense(cfg, out, p["wo"]), {"k_pages": k_pages, "v_pages": v_pages}
 
 
+def gqa_paged_prefill_chunk(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (1, C, d) — one prompt chunk for one slot
+    positions: jnp.ndarray,  # (1, C) absolute positions q_off + [0, C)
+    cache: Dict,  # {"k_pages", "v_pages"} (num_pages, page, Hkv, dh)
+    table_row: jnp.ndarray,  # (max_pages,) this slot's page table row
+    phys_tok: jnp.ndarray,  # (C,) physical page per chunk token
+    off_tok: jnp.ndarray,  # (C,) in-page offset per chunk token
+    q_off,  # scalar absolute position of x[:, 0]
+) -> Tuple[jnp.ndarray, Dict]:
+    """One prompt chunk against the block-paged cache (prefix-conditioned).
+
+    Write first: the chunk's K/V scatters straight into its physical pages
+    (per-token ``(phys, off)`` targets; tokens past the slot's allocation
+    are routed to the null page by the host).  Then gather the slot's whole
+    page table back into logical order — the prefix written by earlier
+    chunks AND this chunk's own keys — and run the same causal masked
+    attention as full prefill.  Gathered keys sit at their absolute
+    positions, so every unmasked key matches the one-shot prefill's key
+    sequence in ascending-position order (bit-exactness) and pages beyond
+    the current position mask out exactly like empty cache slots.
+    """
+    B, C, _ = x.shape
+    assert B == 1
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    k_pages = cache["k_pages"].at[phys_tok, off_tok].set(k[0])
+    v_pages = cache["v_pages"].at[phys_tok, off_tok].set(v[0])
+    page = k_pages.shape[1]
+    maxp = table_row.shape[0]
+    kg = k_pages[table_row].reshape(1, maxp * page, cfg.n_kv_heads, cfg.d_head)
+    vg = v_pages[table_row].reshape(1, maxp * page, cfg.n_kv_heads, cfg.d_head)
+    kpos = jnp.arange(maxp * page, dtype=jnp.int32)[None]
+    out = chunked_attention(
+        q, kg, vg, causal=True, q_offset=q_off, k_positions=kpos,
+        q_chunk=cfg.q_chunk,
+    )
+    out = out.reshape(B, C, cfg.n_heads * cfg.d_head)
+    return dense(cfg, out, p["wo"]), {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def gqa_ring_prefill_chunk(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (1, C, d)
+    positions: jnp.ndarray,  # (1, C)
+    cache_row: Dict,  # {"k", "v", "pos"} — (1, slots, ...) this slot's ring
+    q_off,  # scalar absolute position of x[:, 0]
+    *,
+    window: int,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One prompt chunk against the O(window) ring buffer (SWA).
+
+    The prefix is gathered from the ring in **ascending position order**
+    (ring slot of position p is p % slots, so the gather is a rotation);
+    empty or reset entries carry position label -1 and mask out.  Attention
+    then runs over [prefix ; chunk] with the same causal + window masking
+    as full prefill — ascending-position key order keeps the surviving
+    softmax terms in the one-shot prefill's summation order (bit-exactness).
+    The chunk's trailing min(C, slots) tokens are then written into the ring
+    at their p % slots homes, the layout every later chunk and decode step
+    expects.
+    """
+    B, C, _ = x.shape
+    assert B == 1
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    slots = cache_row["k"].shape[1]
+    # prefix positions q_off-slots .. q_off-1 in ascending order
+    pref_pos = q_off - slots + jnp.arange(slots, dtype=jnp.int32)
+    idx = jnp.mod(pref_pos, slots)
+    keys = jnp.concatenate([cache_row["k"][:, idx], k], axis=1)
+    vals = jnp.concatenate([cache_row["v"][:, idx], v], axis=1)
+    kpos = jnp.concatenate([cache_row["pos"][:, idx], positions], axis=1)
+    out = chunked_attention(
+        q, keys, vals, causal=True, q_offset=q_off, k_positions=kpos,
+        window=window, q_chunk=cfg.q_chunk,
+    )
+    # persist the chunk's trailing tokens (older ones fall off the ring)
+    w = min(C, slots)
+    wpos = positions[0, C - w:]  # (w,)
+    widx = jnp.mod(wpos, slots)
+    new_row = {
+        "k": cache_row["k"].at[:, widx].set(k[:, C - w:]),
+        "v": cache_row["v"].at[:, widx].set(v[:, C - w:]),
+        "pos": cache_row["pos"].at[:, widx].set(wpos[None]),
+    }
+    out = out.reshape(B, C, cfg.n_heads * cfg.d_head)
+    return dense(cfg, out, p["wo"]), new_row
+
+
 def gqa_ring_decode(
     p: Dict,
     cfg: ModelConfig,
@@ -211,18 +309,23 @@ def gqa_ring_decode(
     seq_pos: jnp.ndarray,  # (B,) absolute position of the new token
     *,
     window: Optional[int] = None,
+    active: Optional[jnp.ndarray] = None,  # (B,) slots actually decoding
 ) -> Tuple[jnp.ndarray, Dict]:
     """Per-slot-position decode against the O(window) ring buffer (SWA).
 
     Same layout as the static-wave ring (token at absolute position p sits in
     slot p % slots) but each batch slot advances independently, which is what
-    continuous batching needs.
+    continuous batching needs.  Inactive slots (idle, or mid-way through a
+    chunked prefill whose ring rows are being built incrementally) write to
+    ring index ``slots`` — out of bounds, so the scatter drops it.
     """
     B, S, _ = x.shape
     assert S == 1
     q, k, v = _project_qkv(p, cfg, x, positions)
     slots = cache["k"].shape[1]
     slot = seq_pos % slots  # (B,)
+    if active is not None:
+        slot = jnp.where(active, slot, slots)  # OOB scatter index: dropped
     rows = jnp.arange(B)
     k_cache = cache["k"].at[rows, slot].set(k[:, 0])
     v_cache = cache["v"].at[rows, slot].set(v[:, 0])

@@ -180,7 +180,10 @@ def chunked_attention(
         q_pos = q_offset + c * qc + jnp.arange(qc, dtype=jnp.int32)  # (qc,)
         kp = k_positions[:, None, None, None, :]  # (B,1,1,1,Sk)
         qp = q_pos[None, None, None, :, None]
-        mask = jnp.ones((B, 1, 1, qc, Sk), bool)
+        # kp >= 0 masks empty / reset cache entries (labelled -1) when an
+        # explicit k_positions is passed; the default arange labels are
+        # always >= 0 so the non-cached paths are unaffected
+        mask = jnp.broadcast_to(kp >= 0, (B, 1, 1, qc, Sk))
         if causal:
             mask = jnp.logical_and(mask, kp <= qp)
         if window is not None:

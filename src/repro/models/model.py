@@ -75,15 +75,32 @@ def layer_forward(
     pos_offset,
     seq_pos=None,  # (B,) per-slot absolute positions (continuous batching)
     page_table=None,  # (B, max_pages) physical page ids (paged KV cache)
+    active=None,  # (B,) bool: slots whose decode writes may land
+    chunk: Optional[Dict] = None,  # chunked-prefill context (mode "chunk")
 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
     h = apply_norm(cfg, p["ln1"], x)
+
+    def ssm_branch(h):
+        """SSM forward against per-slot state; mode 'chunk' carries one
+        slot's row across prompt chunks, decode masks inactive slots."""
+        c_ssm = cache.get("ssm") if cache else None
+        if mode == "chunk":
+            out, row = _ssm_chunk_slot(cfg, p["ssm"], h, c_ssm, chunk)
+            return out, _write_slot_rows(c_ssm, row, chunk["slot"])
+        out, st = ssmm.ssm_forward(p["ssm"], cfg, h, mode=mode, state=c_ssm)
+        if st is not None and mode == "decode" and active is not None:
+            st = jax.tree.map(
+                lambda new, old: jnp.where(
+                    active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new.astype(old.dtype), old,
+                ), st, c_ssm,
+            )
+        return out, st
+
     if kind == "ssm":
-        out, st = ssmm.ssm_forward(
-            p["ssm"], cfg, h, mode=mode,
-            state=cache.get("ssm") if cache else None,
-        )
+        out, st = ssm_branch(h)
         if st is not None:
             new_cache["ssm"] = st
         return x + out, (new_cache or None), aux
@@ -93,17 +110,30 @@ def layer_forward(
             p["attn"], cfg, h, positions, mode=mode,
             cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
         )
+    elif mode == "chunk":
+        c_attn = cache.get("attn") if cache else None
+        if c_attn is not None and "k_pages" in c_attn:
+            a_out, a_cache = attn.gqa_paged_prefill_chunk(
+                p["attn"], cfg, h, positions, c_attn, chunk["table_row"],
+                chunk["phys_tok"], chunk["off_tok"], pos_offset,
+            )
+        else:
+            a_out, row = _ring_chunk_slot(cfg, p["attn"], h, positions,
+                                          c_attn, chunk, pos_offset)
+            a_cache = _write_slot_rows(c_attn, row, chunk["slot"])
     elif mode == "decode" and seq_pos is not None:
         # per-slot cache interface: block-paged (full attention) or ring (SWA)
         c_attn = cache.get("attn") if cache else None
         if c_attn is not None and "k_pages" in c_attn:
             a_out, a_cache = attn.gqa_paged_decode(
-                p["attn"], cfg, h, positions, c_attn, page_table, seq_pos
+                p["attn"], cfg, h, positions, c_attn, page_table, seq_pos,
+                active=active,
             )
         else:
             a_out, a_cache = attn.gqa_ring_decode(
                 p["attn"], cfg, h, positions, c_attn, seq_pos,
                 window=cfg.window if cfg.attn_type == "swa" else None,
+                active=active,
             )
     else:
         a_out, a_cache = attn.gqa_forward(
@@ -113,10 +143,7 @@ def layer_forward(
     if a_cache is not None:
         new_cache["attn"] = a_cache
     if kind == "hybrid":
-        s_out, st = ssmm.ssm_forward(
-            p["ssm"], cfg, h, mode=mode,
-            state=cache.get("ssm") if cache else None,
-        )
+        s_out, st = ssm_branch(h)
         if st is not None:
             new_cache["ssm"] = st
         mixer_out = 0.5 * (a_out + s_out)  # Hymba: fused parallel heads
@@ -132,6 +159,60 @@ def layer_forward(
         x = x + ffnm.ffn_forward(p["ffn"], cfg, h2)
     x = constrain(x, ("dp", None, None))
     return x, (new_cache or None), aux
+
+
+# --------------------------------------------------------------------------
+# Chunked-prefill slot helpers (continuous-batching engine)
+# --------------------------------------------------------------------------
+
+def _read_slot_rows(seg_cache: Dict, slot) -> Dict:
+    """Extract one batch slot's rows as a (1, ...) pytree (traced slot id)."""
+    return {
+        k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
+        for k, v in seg_cache.items()
+    }
+
+
+def _write_slot_rows(seg_cache: Dict, rows: Dict, slot) -> Dict:
+    """Scatter (1, ...) rows back into the per-slot cache arrays."""
+    return {
+        k: jax.lax.dynamic_update_slice_in_dim(
+            seg_cache[k], rows[k].astype(seg_cache[k].dtype), slot, 0
+        )
+        for k in seg_cache
+    }
+
+
+def _ssm_chunk_slot(cfg: ModelConfig, p, h, c_ssm: Dict, chunk: Dict):
+    """One prompt chunk through the SSM, carrying one slot's state row.
+
+    On the first chunk the row is zeroed (a fresh request's state; the row
+    may hold garbage from a previous occupant) — zero state/history is
+    bit-identical to prefilling with no carried state at all.
+    """
+    row = _read_slot_rows(c_ssm, chunk["slot"])
+    first = chunk["first"]  # () bool — q_off == 0
+    state_in = {
+        "state": jnp.where(first, 0.0, row["state"]),
+        "conv": jnp.where(first, 0.0, row["conv"]),
+    }
+    out, st = ssmm.ssm_forward(p, cfg, h, mode="prefill", state=state_in)
+    return out, st
+
+
+def _ring_chunk_slot(cfg: ModelConfig, p, h, positions, c_attn: Dict,
+                     chunk: Dict, pos_offset):
+    """One prompt chunk through SWA attention, carrying one slot's ring row.
+
+    The first chunk resets the row's position labels to -1 (masked-empty)
+    so a re-used slot cannot leak a previous occupant's window.
+    """
+    row = _read_slot_rows(c_attn, chunk["slot"])
+    first = chunk["first"]
+    row["pos"] = jnp.where(first, -1, row["pos"])
+    return attn.gqa_ring_prefill_chunk(
+        p, cfg, h, positions, row, pos_offset, window=cfg.window
+    )
 
 
 # --------------------------------------------------------------------------
@@ -191,6 +272,27 @@ def supports_paged_decode(cfg: ModelConfig) -> bool:
     )
 
 
+def supports_padded_prefill(cfg: ModelConfig) -> bool:
+    """Families whose prefill may be right-padded to a bucketed length.
+
+    Full-attention dense/GQA caches index token slots by absolute position
+    and mask by position label, so pad keys never survive attention (they
+    are causally masked during prefill and overwritten by decode before
+    their label becomes reachable) — padding is bit-exact and lets prompt
+    lengths share a handful of power-of-two-page jit buckets.  SWA ring
+    packing and SSM final states are position-*dependent* summaries of the
+    sequence end, and MoE capacity dispatch lets pad tokens steal expert
+    slots from real ones, so those families keep exact prefill shapes.
+    """
+    return (
+        cfg.attn_type == "full"
+        and cfg.family == "dense"
+        and cfg.n_encoder_layers == 0
+        and cfg.frontend == "none"
+        and not cfg.mrope_sections
+    )
+
+
 def init_paged_cache(
     cfg: ModelConfig, max_seqs: int, num_pages: int, page_size: int, max_len: int
 ):
@@ -223,13 +325,17 @@ def init_paged_cache(
     return segs
 
 
-def decode_step_paged(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table):
+def decode_step_paged(cfg: ModelConfig, params, caches, tokens, seq_pos,
+                      page_table, active=None):
     """One continuous-batching decode step (all slots advance together).
 
     tokens: (B, 1) int32 — last sampled token per slot (0 for idle slots);
     seq_pos: (B,) int32 — absolute position the new token occupies (0 idle);
     page_table: (B, max_pages) int32 — physical page per logical page (idle
-    and unmapped entries point at the reserved null page 0).
+    and unmapped entries point at the reserved null page 0);
+    active: (B,) bool — slots actually decoding.  Inactive slots (idle, or
+    mid-way through a chunked prefill) run the math but their cache writes
+    are dropped, so the lockstep step cannot corrupt a half-prefilled slot.
     Returns (logits (B, 1, V), new caches).
     """
     h = jnp.take(params["embed"], tokens, axis=0)
@@ -237,9 +343,46 @@ def decode_step_paged(cfg: ModelConfig, params, caches, tokens, seq_pos, page_ta
     h, new_caches, _ = _run_segments(
         cfg, params, h, positions, mode="decode", caches=caches,
         pos_offset=0, remat=False, seq_pos=seq_pos, page_table=page_table,
+        active=active,
     )
     h = apply_norm(cfg, params["final_norm"], h)
     return _lm_logits(cfg, params, h), new_caches
+
+
+def prefill_chunk(
+    cfg: ModelConfig, params, caches, tokens, slot, q_off,
+    phys_tok, off_tok, table_row, last_idx,
+):
+    """One prompt chunk of one request against the engine's paged caches.
+
+    The workhorse of chunked admission: ``tokens`` (1, C) are positions
+    ``q_off .. q_off + C`` of one request's prompt.  Paged segments scatter
+    the chunk's K/V straight into its physical pages (``phys_tok``/
+    ``off_tok``, null-page-routed when past the slot's allocation) and
+    attend over the slot's ``table_row`` gather; SWA rings and SSM states
+    carry slot rows across chunks.  ``caches`` is the engine's full cache
+    pytree and is donated by the caller's jit, so no admission ever copies
+    the pool.
+
+    Returns (logits (1, 1, V) at in-chunk index ``last_idx`` — the next-
+    token distribution after the chunk's last real token, only meaningful
+    on the final chunk — and the updated caches).
+    """
+    B, C = tokens.shape
+    assert B == 1
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = (q_off + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
+    chunk = {
+        "slot": slot, "first": q_off == 0, "table_row": table_row,
+        "phys_tok": phys_tok, "off_tok": off_tok,
+    }
+    h, new_caches, _ = _run_segments(
+        cfg, params, h, positions, mode="chunk", caches=caches,
+        pos_offset=q_off, remat=False, chunk=chunk,
+    )
+    h_last = jax.lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)
+    h_last = apply_norm(cfg, params["final_norm"], h_last)
+    return _lm_logits(cfg, params, h_last), new_caches
 
 
 # --------------------------------------------------------------------------
@@ -326,6 +469,7 @@ def _embed_inputs(cfg: ModelConfig, params, batch: Dict) -> Tuple[jnp.ndarray, A
 def _run_segments(
     cfg: ModelConfig, params, h, positions, *, mode: str, caches=None,
     pos_offset=0, remat: bool = False, seq_pos=None, page_table=None,
+    active=None, chunk=None,
 ):
     """Scan each stacked segment; returns (h, new_caches, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
@@ -342,6 +486,7 @@ def _run_segments(
                 cfg, _kind, p_layer, x, positions,
                 mode=mode, cache=c_layer, pos_offset=pos_offset,
                 seq_pos=seq_pos, page_table=page_table,
+                active=active, chunk=chunk,
             )
             if c_new is None:
                 c_new = 0  # scan needs a consistent pytree; 0 = no cache
@@ -354,7 +499,7 @@ def _run_segments(
         xs = (stacked, cache_seg) if cache_seg is not None else (stacked,)
         h, (cache_out, auxs) = jax.lax.scan(body, h, xs)
         aux_total = aux_total + jnp.sum(auxs)
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "decode", "chunk"):
             new_caches[f"seg{si}"] = cache_out
     return h, new_caches, aux_total
 
@@ -523,15 +668,25 @@ def _forward_encdec_train(cfg: ModelConfig, params, batch, *, remat=True):
 # Prefill / decode
 # --------------------------------------------------------------------------
 
-def prefill(cfg: ModelConfig, params, batch: Dict):
-    """Full-sequence forward that returns (last-position logits, caches)."""
+def prefill(cfg: ModelConfig, params, batch: Dict, last_idx=None):
+    """Full-sequence forward that returns (last-position logits, caches).
+
+    ``last_idx`` (optional traced scalar) selects which position's logits
+    to return — the bucketed-prefill path right-pads the prompt to a shared
+    jit shape and reads the logits at the last *real* token instead of the
+    last padded one (:func:`supports_padded_prefill`).
+    """
     if cfg.n_encoder_layers:
         return _prefill_encdec(cfg, params, batch)
     h, positions = _embed_inputs(cfg, params, batch)
     h, caches, _ = _run_segments(
         cfg, params, h, positions, mode="prefill", remat=False
     )
-    h = apply_norm(cfg, params["final_norm"], h[:, -1:])
+    if last_idx is None:
+        h = h[:, -1:]
+    else:
+        h = jax.lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)
+    h = apply_norm(cfg, params["final_norm"], h)
     return _lm_logits(cfg, params, h), caches
 
 

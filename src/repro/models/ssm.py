@@ -85,36 +85,18 @@ def _gated_norm(y, z, w, eps=1e-6):
     return (g * w.astype(jnp.float32)).astype(y.dtype)
 
 
-def ssm_forward(
-    p: Dict,
-    cfg: ModelConfig,
-    x: jnp.ndarray,  # (B, S, d)
-    *,
-    mode: str = "train",
-    state: Optional[Dict] = None,
-) -> Tuple[jnp.ndarray, Optional[Dict]]:
-    """Chunked SSD forward.  Returns (out, final_state if prefill/decode)."""
-    if mode == "decode":
-        return ssm_step(p, cfg, x, state)
-    B, S, d = x.shape
-    d_in, H, P, G, N = ssm_dims(cfg)
-    Q = min(cfg.ssm_chunk, S)
-    if S % Q:
-        Q = S
+def _ssd_chunks(xs, B_, C_, dA, init, Q: int):
+    """SSD over ``nc`` chunks of exactly ``Q`` tokens from ``init`` state.
+
+    xs: (B, S, H, P) *discretized* inputs (already scaled by dt); B_/C_:
+    (B, S, G, N); dA: (B, S, H) log-decays; S == nc * Q.  Returns
+    (y (B, S, H, P) fp32, final state (B, H, P, N) fp32).
+    """
+    B, S, H, P = xs.shape
+    G, N = B_.shape[2], B_.shape[3]
     nc = S // Q
-
-    z, xBC, dt = _split_proj(p, cfg, x)
-    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
-    xs = xBC[..., :d_in].reshape(B, S, H, P)
-    B_ = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
-    C_ = xBC[..., d_in + G * N :].reshape(B, S, G, N)
-    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, S, H)
-    a = -jnp.exp(p["A_log"])  # (H,) negative
-    dA = dt * a  # (B, S, H) log-decay per step
-
-    # chunk views
     hg = H // G  # heads per B/C group
-    xs_c = (xs * dt[..., None]).reshape(B, nc, Q, H, P)  # discretized input
+    xs_c = xs.reshape(B, nc, Q, H, P)
     B_c = B_.reshape(B, nc, Q, G, N)
     C_c = C_.reshape(B, nc, Q, G, N)
     dA_c = dA.reshape(B, nc, Q, H)
@@ -145,9 +127,6 @@ def ssm_forward(
     )  # (B, nc, H, P, N)
 
     # ---- inter-chunk scan ----
-    init = (state["state"] if state is not None
-            else jnp.zeros((B, H, P, N), jnp.float32))
-
     def scan_fn(carry, inp):
         s_loc, tot = inp  # (B,H,P,N), (B,H)
         new = jnp.exp(tot)[..., None, None] * carry + s_loc
@@ -166,23 +145,79 @@ def ssm_forward(
         C_heads.astype(jnp.float32) * jnp.exp(cum)[..., None],
         prev_states,
     )
-    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return (y_intra + y_inter).reshape(B, S, H, P), final_state
+
+
+def ssm_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    mode: str = "train",
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Chunked SSD forward.  Returns (out, final_state if prefill/decode).
+
+    ``state`` (optional) carries {"state", "conv"} from an earlier prefix so
+    a prompt can be prefilled in chunks (the serving engine's chunked
+    admission).  Chunking is **grid-aligned**: the SSD chunk boundaries sit
+    at multiples of ``cfg.ssm_chunk`` from the start of the *prefix*, with
+    one ragged remainder chunk at the end — so a sequence prefilled in any
+    number of ssm_chunk-aligned pieces takes exactly the same per-chunk ops
+    (and the same sequential state recurrence) as the one-shot prefill,
+    keeping the two bit-identical.
+    """
+    if mode == "decode":
+        return ssm_step(p, cfg, x, state)
+    B, S, d = x.shape
+    d_in, H, P, G, N = ssm_dims(cfg)
+    K = cfg.ssm_conv
+
+    z, xBC_raw, dt = _split_proj(p, cfg, x)
+    hist = state["conv"] if state is not None else None
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"], history=hist)
+    xs = xBC[..., :d_in].reshape(B, S, H, P)
+    B_ = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    C_ = xBC[..., d_in + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    dA = dt * a  # (B, S, H) log-decay per step
+    xs_d = xs * dt[..., None]  # discretized input
+
+    init = (state["state"] if state is not None
+            else jnp.zeros((B, H, P, N), jnp.float32))
+
+    # grid-aligned chunking: full ssm_chunk-sized chunks + ragged remainder
+    Q = min(cfg.ssm_chunk, S)
+    S_main = (S // Q) * Q
+    ys = []
+    st = init
+    if S_main:
+        y_main, st = _ssd_chunks(
+            xs_d[:, :S_main], B_[:, :S_main], C_[:, :S_main],
+            dA[:, :S_main], st, Q,
+        )
+        ys.append(y_main)
+    if S > S_main:
+        y_rem, st = _ssd_chunks(
+            xs_d[:, S_main:], B_[:, S_main:], C_[:, S_main:],
+            dA[:, S_main:], st, S - S_main,
+        )
+        ys.append(y_rem)
+    y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
     y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)  # skip path
     y = y.reshape(B, S, d_in).astype(x.dtype)
     out = _gated_norm(y, z, p["gn_w"]) @ p["out_proj"]
 
     new_state = None
     if mode in ("prefill", "decode"):
-        conv_hist = xBC_raw_tail(p, cfg, x)  # last (K-1) pre-conv features
-        new_state = {"state": final_state, "conv": conv_hist}
+        # conv cache: last (K-1) *pre-conv* features of the full stream
+        # (prefix history + this call), matching ssm_step's cache contract
+        if hist is None:
+            hist = jnp.zeros((B, K - 1, xBC_raw.shape[-1]), xBC_raw.dtype)
+        conv_hist = jnp.concatenate([hist, xBC_raw], axis=1)[:, -(K - 1):]
+        new_state = {"state": st, "conv": conv_hist}
     return out, new_state
-
-
-def xBC_raw_tail(p, cfg: ModelConfig, x):
-    """Recompute the last (conv-1) pre-activation conv inputs for the cache."""
-    K = cfg.ssm_conv
-    _, xBC, _ = _split_proj(p, cfg, x[:, -(K - 1):])
-    return xBC
 
 
 def _group_mask(H, G):  # pragma: no cover - unused helper kept for clarity

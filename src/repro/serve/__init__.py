@@ -3,6 +3,7 @@ from repro.serve.engine import (
     EngineConfig,
     ServeConfig,
     Server,
+    bucket_tokens,
     frontend_extras,
     make_requests,
     run_static_waves,
@@ -21,6 +22,7 @@ __all__ = [
     "Scheduler",
     "ServeConfig",
     "Server",
+    "bucket_tokens",
     "frontend_extras",
     "make_requests",
     "run_static_waves",

@@ -10,9 +10,17 @@ Two engines share the model's prefill/decode functions:
   (:mod:`repro.serve.kvcache`): a scheduler admits requests from a queue
   into batch slots as pages free up, each slot advances at its own position,
   and a finished slot is re-filled the same step.  The decode step is one
-  jitted function of static shape ``(max_seqs, 1)``; prefill is jitted per
-  distinct prompt length (exact shapes keep SWA/SSM prefill semantics exact
-  — padding a prompt would corrupt ring packing and SSM final states).
+  jitted function of static shape ``(max_seqs, 1)``.
+
+**Chunked, donating prefill**: admission feeds a prompt through the model
+in page-sized chunks (:func:`repro.models.model.prefill_chunk`), each
+chunk's K/V scattered straight into its physical pages by a jitted step
+that *donates* the cache pytree — no admission copies the pool, and a long
+prompt interleaves with the running batch's decode steps instead of
+stalling it.  Chunking also bounds jit-cache growth: every prompt length
+reuses one full-chunk shape plus a small set of final-chunk shapes
+(power-of-two buckets for dense/GQA; exact lengths — capped by the chunk
+size — where semantics require it: SWA ring packing, SSM final states).
 
 Cache families: dense/GQA attention decodes by gather over pages whose size
 is the accelerator kernel block; SWA and SSM keep their O(window)/O(1)
@@ -23,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -39,10 +48,28 @@ from repro.serve.scheduler import Request, Scheduler
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Static-wave server knobs.
+
+    ``prefill_bucket``: quantum (tokens) for power-of-two prompt-length
+    bucketing of dense/GQA prefill — 0 derives it from ``cfg.block``, -1
+    disables bucketing (one jit entry per distinct prompt length, the
+    unbounded-compile-cache failure mode).  Families whose prefill
+    semantics depend on exact length (SWA ring packing, SSM states, MoE
+    capacity) always use exact shapes regardless.
+    """
+
     max_len: int = 512
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
+    prefill_bucket: int = 0
+
+
+def bucket_tokens(n: int, block: int) -> int:
+    """Round a token count up to a power-of-two number of ``block``-sized
+    pages — the shared jit shapes for bucketed (dense/GQA) prefill."""
+    pages = max(1, math.ceil(n / block))
+    return (1 << (pages - 1).bit_length()) * block
 
 
 # jitted step functions are memoized per (hashable, frozen) ModelConfig so
@@ -58,9 +85,10 @@ def _decode_fn(cfg: ModelConfig):
     return jax.jit(functools.partial(M.decode_step, cfg))
 
 
-def _paged_step(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table):
+def _paged_step(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table,
+                active):
     logits, new_caches = M.decode_step_paged(
-        cfg, params, caches, tokens, seq_pos, page_table
+        cfg, params, caches, tokens, seq_pos, page_table, active
     )
     # greedy argmax on-device (same fp32 math as Server._sample): the
     # continuous engine must sync every step to make scheduling
@@ -70,19 +98,28 @@ def _paged_step(cfg: ModelConfig, params, caches, tokens, seq_pos, page_table):
 
 
 def _donate_caches() -> tuple:
-    # donate the cache pytree (arg 1 of _paged_step after cfg binds): the
+    # donate the cache pytree (arg 1 of the partial-bound step fns): the
     # page pool is the dominant buffer and the engine always replaces its
     # reference with the step's output, so the update must happen in place —
     # without donation every token would copy (and briefly double) the whole
-    # multi-layer pool.  CPU has no donation support (XLA warns and copies
-    # anyway), so only ask where it works.
-    return (1,) if jax.default_backend() != "cpu" else ()
+    # multi-layer pool.  XLA:CPU honors donation on this jax pin (verified
+    # by the aliasing regression test in tests/test_serve.py), so ask
+    # everywhere.
+    return (1,)
 
 
 @functools.lru_cache(maxsize=None)
 def _decode_paged_fn(cfg: ModelConfig):
     return jax.jit(
         functools.partial(_paged_step, cfg), donate_argnums=_donate_caches()
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_chunk_fn(cfg: ModelConfig):
+    return jax.jit(
+        functools.partial(M.prefill_chunk, cfg),
+        donate_argnums=_donate_caches(),
     )
 
 
@@ -93,7 +130,9 @@ class Server:
         self.cfg, self.params, self.sc, self.mesh = cfg, params, sc, mesh
         if mesh is not None:
             with mesh, AX.policy(mesh):
-                self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+                self._prefill = jax.jit(
+                    lambda p, b, *a: M.prefill(cfg, p, b, *a)
+                )
                 self._decode = jax.jit(
                     lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
                 )
@@ -128,7 +167,22 @@ class Server:
         tokens = batch["tokens"]
         B, S = tokens.shape
         assert S + max_new_tokens <= sc.max_len, "increase ServeConfig.max_len"
-        logits, caches = self._prefill(self.params, batch)
+        if sc.prefill_bucket >= 0 and M.supports_padded_prefill(cfg):
+            # bucket the prompt length to power-of-two pages: every length
+            # shares a handful of jit entries instead of compiling its own.
+            # Pad keys are causally masked during prefill and overwritten by
+            # decode before their position label becomes reachable, so the
+            # logits at last_idx = S - 1 (and everything after) are
+            # bit-identical to the exact-shape prefill.
+            quantum = sc.prefill_bucket or cfg.block
+            Sp = min(bucket_tokens(S, quantum), sc.max_len)
+            padded = np.zeros((B, Sp), np.int32)
+            padded[:, :S] = np.asarray(tokens)
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(padded)}, jnp.int32(S - 1)
+            )
+        else:
+            logits, caches = self._prefill(self.params, batch)
         caches = self._grow_cache(caches, B, S)
         key = jax.random.PRNGKey(sc.seed)
         out = []
@@ -161,12 +215,26 @@ class EngineConfig:
     ``page_size=0`` derives the page from ``cfg.block`` (the accelerator
     kernel block governs the cache arrangement); ``num_pages=0`` sizes the
     pool for ``max_seqs`` full-length sequences.
+
+    ``prefill_chunk=0`` derives the chunk from the page size (one chunk =
+    one page of tokens), lifted to a multiple of ``cfg.ssm_chunk`` for
+    models with SSM segments so chunk boundaries stay on the SSD chunk grid
+    (the alignment that keeps chunked prefill bit-identical to one-shot).
+    ``prefill_chunks_per_step`` is the admission budget: how many prompt
+    chunks may run per engine step before the decode batch steps — small
+    values bound the latency a long prompt can inject between two decode
+    steps of the running batch.  ``chunked_prefill=False`` falls back to
+    one-shot prefill per admission (still installed through the jitted
+    donating updater).
     """
 
     max_seqs: int = 4
     max_len: int = 128  # per-request capacity (prompt + generation)
     page_size: int = 0
     num_pages: int = 0
+    chunked_prefill: bool = True
+    prefill_chunk: int = 0
+    prefill_chunks_per_step: int = 4
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
@@ -187,17 +255,25 @@ class Engine:
             page_size=ec.page_size, num_pages=ec.num_pages,
         ))
         self.sched = Scheduler(self.kv, ec.max_seqs)
+        self.chunk_size = self._resolve_chunk(ec.prefill_chunk)
+        if ec.prefill_chunks_per_step < 1:
+            raise ValueError("prefill_chunks_per_step must be >= 1")
 
         if mesh is not None:
             # per-instance closures: jit must trace under the mesh context
             with mesh, AX.policy(mesh):
                 self._prefill = jax.jit(functools.partial(M.prefill, cfg))
+                self._chunk_fn = jax.jit(
+                    functools.partial(M.prefill_chunk, cfg),
+                    donate_argnums=_donate_caches(),
+                )
                 self._decode = jax.jit(
                     functools.partial(_paged_step, cfg),
                     donate_argnums=_donate_caches(),
                 )
         else:
             self._prefill = _prefill_fn(cfg)
+            self._chunk_fn = _prefill_chunk_fn(cfg)
             self._decode = _decode_paged_fn(cfg)
         # per-slot last sampled token, kept ON DEVICE: the greedy loop feeds
         # decode outputs straight back in, syncing to host only at
@@ -268,58 +344,156 @@ class Engine:
                 req.n_pending -= 1
         self._pending.clear()
 
-    # -- engine steps -------------------------------------------------------
+    # -- prefill ------------------------------------------------------------
 
-    def _admit_and_prefill(self) -> None:
-        for slot, req in self.sched.admit(self.step_count):
-            prompt = req.effective_prompt
+    def _resolve_chunk(self, requested: int) -> int:
+        """Prefill chunk size: page-sized by default, SSD-grid-aligned.
+
+        Chunk boundaries must sit on multiples of ``cfg.ssm_chunk`` for
+        models with SSM segments — the grid the one-shot SSD prefill uses —
+        so every chunk reproduces the exact per-chunk ops of the one-shot
+        path (bit-exactness).  Attention families accept any boundary.
+        """
+        has_ssm = any(
+            kind in ("ssm", "hybrid") for kind, _ in M.layer_segments(self.cfg)
+        )
+        if requested:
+            if requested < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {requested}")
+            if has_ssm and requested % self.cfg.ssm_chunk:
+                raise ValueError(
+                    f"prefill_chunk {requested} must be a multiple of "
+                    f"ssm_chunk {self.cfg.ssm_chunk} for SSM/hybrid models"
+                )
+            return requested
+        chunk = self.kv.page_size
+        if has_ssm:
+            chunk = math.lcm(chunk, self.cfg.ssm_chunk)
+        return chunk
+
+    def _last_chunk_len(self, n: int) -> int:
+        """Jit shape for a final (ragged) chunk of ``n`` real tokens.
+
+        Dense/GQA buckets to the next power of two (pad keys land in the
+        null page / the decode page and are masked or overwritten before
+        they become visible — bit-exact); SWA ring packing and SSM final
+        states need the exact length, which is still capped by the chunk
+        size, so shapes stay bounded either way.
+        """
+        if not M.supports_padded_prefill(self.cfg):
+            return n
+        return min(bucket_tokens(n, 1), self.chunk_size)
+
+    def _prefill_one_chunk(self, slot: int, req: Request) -> None:
+        """Feed the next chunk of a slot's prompt through the paged caches.
+
+        The chunk step donates the cache pytree — the pool is written in
+        place — and on the final chunk samples the request's first token.
+        """
+        prompt = req.effective_prompt
+        off = req.prefill_pos
+        n = min(self.chunk_size, len(prompt) - off)
+        # full chunks share ONE jit shape; the final ragged chunk draws from
+        # the small bucketed/exact shape set (bounded by the chunk size)
+        n_pad = self._last_chunk_len(n) if off + n >= len(prompt) else n
+        toks = np.zeros((1, n_pad), np.int32)
+        toks[0, :n] = prompt[off : off + n]
+        phys_tok, off_tok = self.kv.token_targets(slot, off, n_pad)
+        logits, self.kv.data = self._chunk_fn(
+            self.params, self.kv.data, jnp.asarray(toks), jnp.int32(slot),
+            jnp.int32(off), phys_tok, off_tok, self.kv.table_row(slot),
+            jnp.int32(n - 1),
+        )
+        req.prefill_pos += n
+        self.prefill_tokens += n
+        if not req.prefilling:  # final chunk: sample the first token
+            self._append_token(slot, req, self._sample(logits[0, -1], req))
+
+    def _prefill_full(self, slot: int, req: Request) -> None:
+        """One-shot prefill + jitted donating install (unchunked path)."""
+        prompt = req.effective_prompt
+        S = len(prompt)
+        if M.supports_padded_prefill(self.cfg):
+            # clamp to the per-slot capacity: positions past max_len can
+            # never be used, so padding beyond it would only waste compute
+            # and compile an oversized shape
+            Sp = min(bucket_tokens(S, self.kv.page_size), self.kv.max_len)
+            toks = np.zeros((1, Sp), np.int32)
+            toks[0, :S] = prompt
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(S - 1)
+            )
+        else:
             logits, caches = self._prefill(
                 self.params, {"tokens": jnp.asarray(prompt)[None]}
             )
-            self.kv.install_prefill(slot, caches, len(prompt))
-            self.prefill_tokens += len(prompt)
-            self._append_token(slot, req, self._sample(logits[0, -1], req))
+        self.kv.install_prefill(slot, caches)
+        req.prefill_pos = req.prefill_target
+        self.prefill_tokens += S
+        self._append_token(slot, req, self._sample(logits[0, -1], req))
+
+    # -- engine steps -------------------------------------------------------
+
+    def _admit_and_prefill(self) -> None:
+        admitted = self.sched.admit(self.step_count)
+        if not self.ec.chunked_prefill:
+            for slot, req in admitted:
+                self._prefill_full(slot, req)
+            return
+        # chunk budget: oldest admission first (FIFO toward first token);
+        # whatever is left after the budget waits for the next engine step,
+        # with the decode batch stepping in between — a max-length prompt
+        # can no longer stall in-flight decodes for its whole prefill
+        budget = self.ec.prefill_chunks_per_step
+        for slot, req in self.sched.prefilling:
+            while budget and req.prefilling:
+                self._prefill_one_chunk(slot, req)
+                budget -= 1
+            if not budget:
+                break
 
     def _decode_once(self) -> None:
-        running = self.sched.running
-        if running and sum(
-            self.kv.growth_deficit(slot, req.next_pos) for slot, req in running
+        decoding = self.sched.decoding
+        if decoding and sum(
+            self.kv.growth_deficit(slot, req.next_pos) for slot, req in decoding
         ) > self.kv.num_free_pages:
             # the growth round below may preempt: victims must carry their
             # full token history back to the queue, so sync first
             self._flush_pending()
         self.sched.grow_for_decode(self.step_count)
-        running = self.sched.running
-        if not running:
+        decoding = self.sched.decoding
+        if not decoding:
             return
         seq_pos = np.zeros((self.ec.max_seqs,), np.int32)  # idle slots -> 0
-        for slot, req in running:
+        active = np.zeros((self.ec.max_seqs,), bool)  # idle/prefilling: False
+        for slot, req in decoding:
             seq_pos[slot] = req.next_pos
+            active[slot] = True
         greedy, logits, self.kv.data = self._decode(
             self.params, self.kv.data, self._last_tok[:, None],
-            jnp.asarray(seq_pos), self.kv.page_table(),
+            jnp.asarray(seq_pos), self.kv.page_table(), jnp.asarray(active),
         )
         self.decode_steps += 1
         if self.ec.temperature > 0:
             # host sampling needs the logits now — no deferral on this path
-            for slot, req in running:
+            for slot, req in decoding:
                 self._append_token(slot, req, self._sample(logits[slot, -1], req))
             return
         self._last_tok = greedy  # feed back on-device; no host round-trip
-        self._pending.append((greedy, running))
-        for slot, req in running:
+        self._pending.append((greedy, decoding))
+        for slot, req in decoding:
             req.n_pending += 1
         if self.ec.eos_id is not None:
             # early-stop decisions need token values every step
             self._flush_pending()
-            for slot, req in running:
+            for slot, req in decoding:
                 if req.state == "running" and (
                     req.done or req.out_tokens[-1] == self.ec.eos_id
                 ):
                     self.sched.finish(slot, self.step_count)
             return
         # max_new completion is pure length bookkeeping: no sync needed
-        for slot, req in running:
+        for slot, req in decoding:
             if req.done:
                 self.sched.finish(slot, self.step_count)
 

@@ -25,8 +25,9 @@ that the engine threads through its jitted decode step.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,77 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 
 NULL_PAGE = 0  # reserved physical page: idle-slot writes, unmapped gathers
+
+
+# one jitted donating updater per model config: every slot write (paged
+# scatter, ring row, SSM state row) happens inside a single jit call whose
+# cache-pool argument is DONATED — the pool is updated in place instead of
+# being copied per admission (the eager host-side `.at[].set` path copied
+# the entire multi-layer pool for every request installed).  jax's own
+# per-shape executable cache makes repeat prompt shapes free; the engine
+# bounds the number of distinct shapes by bucketing (dense) or chunking.
+@functools.lru_cache(maxsize=None)
+def _install_fn(cfg: ModelConfig):
+    def install(data, src, slot, phys_tok, off_tok):
+        out = {}
+        for si, (kind, _n) in enumerate(M.layer_segments(cfg)):
+            seg = f"seg{si}"
+            dst, new = data[seg], {}
+            if "attn" in dst:
+                if "k_pages" in dst["attn"]:
+                    new["attn"] = _install_paged_jit(
+                        dst["attn"], src[seg]["attn"], phys_tok, off_tok
+                    )
+                else:
+                    new["attn"] = _install_ring_jit(
+                        dst["attn"], src[seg]["attn"], slot
+                    )
+            if "ssm" in dst:
+                new["ssm"] = {
+                    key: jax.lax.dynamic_update_slice_in_dim(
+                        dst["ssm"][key],
+                        src[seg]["ssm"][key].astype(dst["ssm"][key].dtype),
+                        slot, 1,
+                    )
+                    for key in ("state", "conv")
+                }
+            out[seg] = new
+        return out
+
+    return jax.jit(install, donate_argnums=(0,))
+
+
+def _install_paged_jit(dst, src, phys_tok, off_tok):
+    """Scatter (L, S) prefill K/V per token into the physical page pool.
+
+    Tokens past the slot's allocation arrive mapped to the null page (the
+    bucketed-prefill pad tail), whose content is garbage by design.
+    """
+    out = dict(dst)
+    for name in ("k", "v"):
+        x = src[name][:, 0]  # (L, S, Hkv, dh)
+        out[f"{name}_pages"] = dst[f"{name}_pages"].at[:, phys_tok, off_tok].set(
+            x.astype(dst[f"{name}_pages"].dtype)
+        )
+    return out
+
+
+def _install_ring_jit(dst, src, slot):
+    """Write one request's SWA ring (k/v/pos) into its slot's rows."""
+    slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
+    got = src["k"].shape[2]  # prefill ring length: min(window, S)
+    assert got <= slots_e, (got, slots_e)
+    # token at absolute position p lives in ring slot p % slots_e; the
+    # prefill packing already satisfies this for got == window (== slots_e)
+    # and trivially for S < window (identity placement, see attention.py)
+    out = {}
+    for name, empty in (("k", 0.0), ("v", 0.0), ("pos", -1)):
+        L = dst[name].shape[0]
+        row_shape = (L, 1) + dst[name].shape[2:]
+        row = jnp.full(row_shape, empty, dst[name].dtype)
+        row = row.at[:, :, :got].set(src[name].astype(dst[name].dtype))
+        out[name] = jax.lax.dynamic_update_slice_in_dim(dst[name], row, slot, 1)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,54 +263,59 @@ class PagedKVCache:
 
     # -- prefill install ----------------------------------------------------
 
-    def install_prefill(self, slot: int, prefill_caches, prompt_len: int) -> None:
+    def install_prefill(self, slot: int, prefill_caches) -> None:
         """Write one request's prefill caches into its slot.
 
         ``prefill_caches`` is the (batch=1) pytree from ``M.prefill``: paged
         segments scatter their K/V into the slot's physical pages; SWA rings
-        and SSM states copy into the slot's row.  Idempotent per slot — a
-        re-admitted (preempted) request simply overwrites.
+        and SSM states copy into the slot's row.  The source may be right-
+        padded past the slot's page allocation (bucketed prefill): those
+        tokens map to the null page.  Idempotent per slot — a re-admitted
+        (preempted) request simply overwrites.
+
+        All writes happen in ONE jitted call that **donates** the cache
+        pytree, so installation updates the pool in place — no admission
+        copies (or even briefly doubles) the multi-layer pool.
         """
+        src_len = self._src_token_count(prefill_caches)
+        phys_tok, off_tok = self.token_targets(slot, 0, src_len)
+        self.data = _install_fn(self.cfg)(
+            self.data, prefill_caches, jnp.int32(slot), phys_tok, off_tok
+        )
+
+    def _src_token_count(self, prefill_caches) -> int:
+        """Token count of the (possibly padded) paged prefill source."""
         for si, (kind, _n) in enumerate(M.layer_segments(self.cfg)):
             seg = f"seg{si}"
-            dst, src = self.data[seg], prefill_caches[seg]
-            if "attn" in dst:
-                if "k_pages" in dst["attn"]:
-                    self._install_paged(slot, dst["attn"], src["attn"], prompt_len)
-                else:
-                    self._install_ring(slot, dst["attn"], src["attn"])
-            if "ssm" in dst:
-                for key in ("state", "conv"):
-                    dst["ssm"][key] = dst["ssm"][key].at[:, slot].set(
-                        src["ssm"][key][:, 0]
-                    )
+            if "attn" in self.data[seg] and "k_pages" in self.data[seg]["attn"]:
+                return int(prefill_caches[seg]["attn"]["k"].shape[2])
+        return 1  # no paged segment (SWA/SSM): targets unused
 
-    def _install_paged(self, slot: int, dst, src, prompt_len: int) -> None:
-        page = self.page_size
-        n_pages = self.pages_for(prompt_len)
-        phys = jnp.asarray(self._pages[slot][:n_pages])
-        pad = n_pages * page - prompt_len
-        for name in ("k", "v"):
-            x = src[name][:, 0]  # (L, S, Hkv, dh)
-            if pad:
-                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            L = x.shape[0]
-            xb = x.reshape(L, n_pages, page, *x.shape[2:])
-            dst[f"{name}_pages"] = dst[f"{name}_pages"].at[:, phys].set(xb)
+    # -- chunk write targets -------------------------------------------------
 
-    def _install_ring(self, slot: int, dst, src) -> None:
-        slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
-        got = src["k"].shape[2]  # prefill ring length: min(window, S)
-        assert got <= slots_e, (got, slots_e)
-        # token at absolute position p lives in ring slot p % slots_e; the
-        # prefill packing already satisfies this for got == window (== slots_e)
-        # and trivially for S < window (identity placement, see attention.py)
-        for name, empty in (("k", 0.0), ("v", 0.0), ("pos", -1)):
-            L = dst[name].shape[0]
-            row_shape = (L,) + dst[name].shape[2:]
-            row = jnp.full(row_shape, empty, dst[name].dtype)
-            row = row.at[:, :got].set(src[name][:, 0])
-            dst[name] = dst[name].at[:, slot].set(row)
+    def token_targets(
+        self, slot: int, start: int, n: int
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-token (physical page, in-page offset) for positions
+        ``[start, start + n)`` of a slot.  Positions past the slot's page
+        allocation (the pad tail of a bucketed prompt) are routed to the
+        null page, whose content is garbage by design."""
+        pages = np.asarray(self._pages[slot], np.int64)
+        pos = np.arange(start, start + n)
+        lp = pos // self.page_size
+        phys = np.where(
+            lp < len(pages), pages[np.minimum(lp, len(pages) - 1)], NULL_PAGE
+        )
+        return (
+            jnp.asarray(phys, jnp.int32),
+            jnp.asarray(pos % self.page_size, jnp.int32),
+        )
+
+    def table_row(self, slot: int) -> jnp.ndarray:
+        """One slot's page-table row for the chunk-prefill gather — a slice
+        of the dirty-tracked device mirror, so a multi-chunk admission does
+        not re-upload the (immutable) row once per chunk."""
+        return self.page_table()[slot]
 
     # -- stats --------------------------------------------------------------
 

@@ -77,6 +77,12 @@ class Request:
     # engine defers host syncs between scheduling events, so length
     # bookkeeping must count them (values arrive at the next flush)
     n_pending: int = 0
+    # chunked-prefill progress: [0, prefill_target) while the prompt is
+    # being fed through the cache page by page; the request joins the
+    # decode batch only once the whole (effective) prompt is in.  Reset on
+    # preemption — a re-admitted request re-prefills from scratch.
+    prefill_pos: int = 0
+    prefill_target: int = 0
     stats: RequestStats = dataclasses.field(default_factory=RequestStats)
 
     @property
@@ -96,6 +102,11 @@ class Request:
         return np.concatenate(
             [self.prompt, np.asarray(self.out_tokens, np.int32)]
         )
+
+    @property
+    def prefilling(self) -> bool:
+        """Admitted but the prompt is not fully through the cache yet."""
+        return self.state == "running" and self.prefill_pos < self.prefill_target
 
     @property
     def next_pos(self) -> int:
@@ -172,6 +183,8 @@ class Scheduler:
             self.slots[slot] = req
             self._admit_order.append(slot)
             req.state = "running"
+            req.prefill_pos = 0
+            req.prefill_target = len(req.effective_prompt)
             now = time.perf_counter()
             if req.stats.admitted_step < 0:
                 req.stats.admitted_step = step
@@ -182,12 +195,14 @@ class Scheduler:
     # -- growth / preemption ------------------------------------------------
 
     def grow_for_decode(self, step: int) -> List[Request]:
-        """Ensure every running slot can write its next token; preempt LIFO
-        on OOM.  Returns the requests preempted this step."""
+        """Ensure every decoding slot can write its next token; preempt LIFO
+        on OOM.  Returns the requests preempted this step.  Mid-prefill
+        slots need no growth (admission reserved their prompt + one decode
+        page) but remain preemption victims like any other slot."""
         preempted: List[Request] = []
         for slot in list(self._admit_order):  # oldest first get pages first
             req = self.slots[slot]
-            if req is None:
+            if req is None or req.prefilling:
                 continue
             while not self.kv.ensure_capacity(slot, req.next_pos):
                 victim_slot = self._admit_order[-1]  # youngest
@@ -204,6 +219,7 @@ class Scheduler:
         self.slots[slot] = None
         self._admit_order.remove(slot)
         req.state = "waiting"
+        req.prefill_pos = 0  # re-admission re-prefills (recompute discipline)
         req.stats.n_preemptions += 1
         self.queue.appendleft(req)  # preempted requests resume first
         return req
@@ -227,6 +243,20 @@ class Scheduler:
     @property
     def running(self) -> List[Tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def decoding(self) -> List[Tuple[int, Request]]:
+        """Occupied slots whose prompt is fully in — the decode batch."""
+        return [(i, r) for i, r in self.running if not r.prefilling]
+
+    @property
+    def prefilling(self) -> List[Tuple[int, Request]]:
+        """Occupied slots mid-prefill, oldest admission first (the order
+        the chunk budget is spent in — FIFO toward first token)."""
+        return [
+            (s, self.slots[s]) for s in self._admit_order
+            if self.slots[s] is not None and self.slots[s].prefilling
+        ]
 
     def has_work(self) -> bool:
         return bool(self.pending or self.queue or any(
