@@ -6,10 +6,18 @@ Multi-request workload (Poisson-ish staggered arrivals, fixed seeds):
       --num-requests 6 --max-seqs 2 --prompt-len 12 --max-new 16 \
       --mean-interarrival 4 --page-size 8
 
-Legacy single-wave batched generation (also the path for MLA / enc-dec /
-frontend models, which the paged engine does not serve yet):
+MLA (DeepSeek-V3-style) serves through latent pages; enc-dec (whisper)
+through immutable per-slot cross rows + paged decoder self-attention:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b \
+      --smoke --num-requests 6 --max-seqs 2 --prompt-len 8 --max-new 12
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper-tiny --smoke \
+      --num-requests 6 --max-seqs 2 --prompt-len 8 --max-new 12
+
+Legacy single-wave batched generation (also the only path for the vision
+frontend, which the adapter registry does not cover yet):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-72b --smoke \
       --batch 4 --prompt-len 16 --max-new 32
 """
 from __future__ import annotations
@@ -22,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C
+from repro.models import adapters as A
 from repro.models import model as M
 from repro.serve import (
     Engine,
@@ -80,6 +89,7 @@ def run_workload(cfg, params, args):
             temperature=args.temperature, seed=args.seed,
             chunked_prefill=not args.no_chunked_prefill,
             prefill_chunk=args.prefill_chunk,
+            prefill_tokens_per_step=args.prefill_tokens_per_step,
             prefill_chunks_per_step=args.prefill_chunks_per_step,
         ))
         for r in reqs:
@@ -90,7 +100,7 @@ def run_workload(cfg, params, args):
         dt = time.time() - t0
         mode = ("chunked prefill "
                 f"(chunk={eng.chunk_size} tok, "
-                f"{eng.ec.prefill_chunks_per_step} chunks/step)"
+                f"budget={eng.tokens_per_step} tok/step)"
                 if eng.ec.chunked_prefill else "one-shot prefill")
         print(f"[continuous]   {len(done)} requests, {useful} tokens in "
               f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile); "
@@ -131,9 +141,14 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked-admission chunk in tokens; 0 derives one "
                          "page (SSD-grid-aligned for SSM models)")
+    ap.add_argument("--prefill-tokens-per-step", type=int, default=0,
+                    help="prompt tokens admitted per engine step before the "
+                         "decode batch steps (page-granular; the "
+                         "latency/throughput knob).  0 derives from the "
+                         "deprecated --prefill-chunks-per-step alias")
     ap.add_argument("--prefill-chunks-per-step", type=int, default=4,
-                    help="prompt chunks admitted per engine step before the "
-                         "decode batch steps (latency/throughput knob)")
+                    help="DEPRECATED alias: admission budget as a chunk "
+                         "count (use --prefill-tokens-per-step)")
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="one-shot prefill per admission (the pre-chunking "
                          "behavior; still installed via donating jit)")
@@ -142,13 +157,14 @@ def main():
 
     cfg = C.get_config(args.arch, smoke=args.smoke,
                        dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    if args.num_requests > 0 and args.engine != "static":
+        # refuse BEFORE any pool (or even params) is allocated, with the
+        # exact family list the adapter registry reports
+        msg = A.unsupported_message(cfg, hint="rerun with --engine static")
+        if msg is not None:
+            raise SystemExit(msg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if args.num_requests > 0:
-        if args.engine != "static" and not M.supports_paged_decode(cfg):
-            raise SystemExit(
-                f"{args.arch}: continuous batching not supported for this "
-                "family yet; rerun with --engine static"
-            )
         run_workload(cfg, params, args)
     else:
         run_single_wave(cfg, params, args)

@@ -1,0 +1,466 @@
+"""CacheAdapter: one paged-cache protocol implementation per layer family.
+
+The continuous-batching engine (:mod:`repro.serve`) stores decode context in
+the units the accelerator kernel consumes — pages of ``cfg.block`` token
+slots.  What a *page of context* means differs per layer family:
+
+* full-attention dense/GQA layers page the K/V tensors themselves,
+* MLA layers page the tiny latent ``c_kv`` + shared rotary key (the point
+  of MLA: the latent is what the absorbed-matmul decode consumes),
+* SWA layers keep an O(window) ring row per batch slot,
+* SSM layers keep an O(1) state row per batch slot,
+* encoder-decoder cross-attention keeps an immutable encoder-side K/V row
+  per slot, installed once at admission.
+
+Each family implements :class:`CacheAdapter`: pool shapes, the donated
+prefill install, the chunked-prefill step, the per-slot decode step, and
+the active-mask semantics that keep a lockstep batch step from corrupting
+slots it does not own.  The engine, scheduler and model layers drive
+adapters generically through :func:`adapters_for` — this module is the ONLY
+place that knows which family uses which cache layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssmm
+
+
+# --------------------------------------------------------------------------
+# Segment structure (which layer kinds a config stacks, and how many)
+# --------------------------------------------------------------------------
+
+def layer_segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """Homogeneous layer groups, each scanned with stacked params."""
+    if cfg.family == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("hybrid", cfg.n_layers)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(("dense", cfg.first_k_dense))
+        segs.append(("moe", cfg.n_layers - cfg.first_k_dense))
+        return segs
+    return [("dense", cfg.n_layers)]  # dense / vlm / encdec decoder
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheGeometry:
+    """Sizing of the engine's cache pools (tokens are page-granular)."""
+
+    max_seqs: int
+    num_pages: int
+    page_size: int
+    max_len: int
+
+
+# --------------------------------------------------------------------------
+# Shared slot-row helpers (per-slot, non-paged layouts)
+# --------------------------------------------------------------------------
+
+def read_slot_rows(seg_cache: Dict, slot) -> Dict:
+    """Extract one batch slot's rows as a (1, ...) pytree (traced slot id)."""
+    return {
+        k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
+        for k, v in seg_cache.items()
+    }
+
+
+def write_slot_rows(seg_cache: Dict, rows: Dict, slot, *, axis: int = 0) -> Dict:
+    """Scatter one slot's rows back into the per-slot cache arrays.
+
+    ``axis`` is the slot axis: 0 inside a layer step (the leading L axis is
+    scanned away), 1 for install into the full (L, max_seqs, ...) pools.
+    """
+    return {
+        k: jax.lax.dynamic_update_slice_in_dim(
+            seg_cache[k], rows[k].astype(seg_cache[k].dtype), slot, axis
+        )
+        for k in seg_cache
+    }
+
+
+def _install_paged(dst: Dict, src: Dict, phys_tok, off_tok,
+                   names: Dict[str, str]) -> Dict:
+    """Scatter (L, S)-shaped prefill tensors per token into physical pages.
+
+    ``names`` maps prefill-cache keys to pool keys (e.g. ``k -> k_pages``).
+    Tokens past the slot's allocation arrive mapped to the null page (the
+    bucketed-prefill pad tail), whose content is garbage by design.
+    """
+    out = dict(dst)
+    for s_name, p_name in names.items():
+        x = src[s_name][:, 0]  # (L, S, ...)
+        out[p_name] = dst[p_name].at[:, phys_tok, off_tok].set(
+            x.astype(dst[p_name].dtype)
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# The protocol
+# --------------------------------------------------------------------------
+
+class CacheAdapter:
+    """One layer family's share of the engine cache.
+
+    ``key`` is the segment-cache entry the adapter owns; ``param_key`` the
+    layer-parameter subtree that drives it.  ``paged`` adapters draw on the
+    shared physical page pool (page accounting in the allocator covers
+    them); non-paged adapters own ``max_seqs`` per-slot rows.
+    """
+
+    key: str = ""
+    param_key: str = ""
+    family: str = ""  # human name the registry reports
+    paged: bool = False
+
+    def chunk_multiple(self, cfg: ModelConfig) -> int:
+        """Prefill chunk boundaries must sit on multiples of this."""
+        return 1
+
+    def init_pool(self, cfg: ModelConfig, geom: CacheGeometry) -> Dict:
+        """One layer's share of the engine cache (pre L-stacking)."""
+        raise NotImplementedError
+
+    def install(self, cfg: ModelConfig, dst: Dict, src: Dict, slot,
+                phys_tok, off_tok) -> Dict:
+        """Write one request's one-shot prefill cache into its slot
+        (traced inside the engine's donating install jit)."""
+        raise NotImplementedError
+
+    def src_tokens(self, src: Dict) -> Optional[int]:
+        """Token count of a (possibly padded) paged prefill source — the
+        host needs it to build per-token page targets.  None: not paged."""
+        return None
+
+    def chunk(self, p: Dict, cfg: ModelConfig, h, positions, cache: Dict,
+              ctx: Dict, pos_offset):
+        """One prompt chunk of one slot.  ``ctx`` carries {slot, first,
+        table_row, phys_tok, off_tok}.  Returns (mixer_out, new_cache)."""
+        raise NotImplementedError
+
+    def decode(self, p: Dict, cfg: ModelConfig, h, positions, cache: Dict,
+               *, seq_pos, page_table, active):
+        """One lockstep decode step, every slot at its own position.
+        Inactive slots' cache writes must be dropped (null page / OOB
+        index / where-mask).  Returns (mixer_out, new_cache)."""
+        raise NotImplementedError
+
+
+class PagedAttnAdapter(CacheAdapter):
+    """Full-attention dense/GQA: K/V paged in kernel-block-sized pages."""
+
+    key = "attn"
+    param_key = "attn"
+    family = "dense/GQA (paged K/V)"
+    paged = True
+
+    def init_pool(self, cfg, geom):
+        return attn.paged_cache_init(cfg, geom.num_pages, geom.page_size)
+
+    def install(self, cfg, dst, src, slot, phys_tok, off_tok):
+        return _install_paged(dst, src, phys_tok, off_tok,
+                              {"k": "k_pages", "v": "v_pages"})
+
+    def src_tokens(self, src):
+        return int(src["k"].shape[2])
+
+    def chunk(self, p, cfg, h, positions, cache, ctx, pos_offset):
+        return attn.gqa_paged_prefill_chunk(
+            p, cfg, h, positions, cache, ctx["table_row"],
+            ctx["phys_tok"], ctx["off_tok"], pos_offset,
+        )
+
+    def decode(self, p, cfg, h, positions, cache, *, seq_pos, page_table,
+               active):
+        return attn.gqa_paged_decode(
+            p, cfg, h, positions, cache, page_table, seq_pos, active=active
+        )
+
+
+class RingAttnAdapter(CacheAdapter):
+    """Sliding-window attention: O(window) ring row per batch slot."""
+
+    key = "attn"
+    param_key = "attn"
+    family = "SWA (ring)"
+
+    def init_pool(self, cfg, geom):
+        return attn.gqa_cache_init(cfg, geom.max_seqs, geom.max_len,
+                                   window_only=True)
+
+    def install(self, cfg, dst, src, slot, phys_tok, off_tok):
+        slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
+        got = src["k"].shape[2]  # prefill ring length: min(window, S)
+        assert got <= slots_e, (got, slots_e)
+        # token at absolute position p lives in ring slot p % slots_e; the
+        # prefill packing already satisfies this for got == window
+        # (== slots_e) and trivially for S < window (identity placement)
+        out = {}
+        for name, empty in (("k", 0.0), ("v", 0.0), ("pos", -1)):
+            L = dst[name].shape[0]
+            row_shape = (L, 1) + dst[name].shape[2:]
+            row = jnp.full(row_shape, empty, dst[name].dtype)
+            row = row.at[:, :, :got].set(src[name].astype(dst[name].dtype))
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                dst[name], row, slot, 1
+            )
+        return out
+
+    def chunk(self, p, cfg, h, positions, cache, ctx, pos_offset):
+        # the first chunk resets the row's position labels to -1 (masked-
+        # empty) so a re-used slot cannot leak a previous occupant's window
+        row = read_slot_rows(cache, ctx["slot"])
+        row["pos"] = jnp.where(ctx["first"], -1, row["pos"])
+        out, new_row = attn.gqa_ring_prefill_chunk(
+            p, cfg, h, positions, row, pos_offset, window=cfg.window
+        )
+        return out, write_slot_rows(cache, new_row, ctx["slot"])
+
+    def decode(self, p, cfg, h, positions, cache, *, seq_pos, page_table,
+               active):
+        return attn.gqa_ring_decode(
+            p, cfg, h, positions, cache, seq_pos, window=cfg.window,
+            active=active,
+        )
+
+
+class LatentMLAAdapter(CacheAdapter):
+    """MLA (DeepSeek-V3): latent ``c_kv`` + shared rotary key paged.
+
+    Pages hold ``kv_lora_rank + qk_rope_dim`` floats per token instead of
+    ``2 * n_kv_heads * d_head`` — the families with the most bandwidth to
+    save from the paper's block-sized arrangement.  Decode runs the
+    absorbed-matmul formulation straight over the gathered latent pages.
+    """
+
+    key = "attn"
+    param_key = "attn"
+    family = "MLA (latent pages)"
+    paged = True
+
+    def init_pool(self, cfg, geom):
+        return attn.mla_paged_cache_init(cfg, geom.num_pages, geom.page_size)
+
+    def install(self, cfg, dst, src, slot, phys_tok, off_tok):
+        return _install_paged(dst, src, phys_tok, off_tok,
+                              {"ckv": "ckv_pages", "krope": "krope_pages"})
+
+    def src_tokens(self, src):
+        return int(src["ckv"].shape[2])
+
+    def chunk(self, p, cfg, h, positions, cache, ctx, pos_offset):
+        return attn.mla_paged_prefill_chunk(
+            p, cfg, h, positions, cache, ctx["table_row"],
+            ctx["phys_tok"], ctx["off_tok"], pos_offset,
+        )
+
+    def decode(self, p, cfg, h, positions, cache, *, seq_pos, page_table,
+               active):
+        return attn.mla_paged_decode(
+            p, cfg, h, positions, cache, page_table, seq_pos, active=active
+        )
+
+
+class SSMStateAdapter(CacheAdapter):
+    """SSM (mamba2 / hymba branch): O(1) state + conv rows per slot."""
+
+    key = "ssm"
+    param_key = "ssm"
+    family = "SSM (state rows)"
+
+    def chunk_multiple(self, cfg):
+        # chunk boundaries must sit on the SSD chunk grid — the grid the
+        # one-shot prefill uses — so every chunk reproduces the exact
+        # per-chunk ops of the one-shot path (bit-exactness)
+        return cfg.ssm_chunk
+
+    def init_pool(self, cfg, geom):
+        return ssmm.ssm_state_init(cfg, geom.max_seqs)
+
+    def install(self, cfg, dst, src, slot, phys_tok, off_tok):
+        return write_slot_rows(dst, src, slot, axis=1)
+
+    def chunk(self, p, cfg, h, positions, cache, ctx, pos_offset):
+        # on the first chunk the row is zeroed (a fresh request's state; the
+        # row may hold garbage from a previous occupant) — zero state /
+        # history is bit-identical to prefilling with no carried state
+        row = read_slot_rows(cache, ctx["slot"])
+        state_in = {
+            "state": jnp.where(ctx["first"], 0.0, row["state"]),
+            "conv": jnp.where(ctx["first"], 0.0, row["conv"]),
+        }
+        out, st = ssmm.ssm_forward(p, cfg, h, mode="prefill", state=state_in)
+        return out, write_slot_rows(cache, st, ctx["slot"])
+
+    def decode(self, p, cfg, h, positions, cache, *, seq_pos, page_table,
+               active):
+        out, st = ssmm.ssm_forward(p, cfg, h, mode="decode", state=cache)
+        if active is not None:
+            st = jax.tree.map(
+                lambda new, old: jnp.where(
+                    active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new.astype(old.dtype), old,
+                ), st, cache,
+            )
+        return out, st
+
+
+class CrossAttnAdapter(CacheAdapter):
+    """Encoder-decoder cross-attention: immutable encoder-side K/V rows.
+
+    The encoder runs ONCE per request at admission; its projected K/V are
+    installed into the slot's rows and never written again — chunked
+    decoder prefill and decode both read the same rows, so preemption-with-
+    recompute only re-runs the encoder, never corrupts it mid-stream.
+    """
+
+    key = "cross"
+    param_key = "cross"
+    family = "enc-dec (cross rows + paged self-attn)"
+    installs_at_admission = True
+
+    def init_pool(self, cfg, geom):
+        dh = cfg.d_head
+        return {
+            "k": jnp.zeros(
+                (geom.max_seqs, cfg.encoder_seq, cfg.n_kv_heads, dh), cfg.dtype
+            ),
+            "v": jnp.zeros(
+                (geom.max_seqs, cfg.encoder_seq, cfg.n_kv_heads, dh), cfg.dtype
+            ),
+        }
+
+    def install(self, cfg, dst, src, slot, phys_tok, off_tok):
+        return write_slot_rows(dst, src, slot, axis=1)
+
+    def admission_src(self, cfg, params, batch: Dict) -> Dict:
+        """Encoder-side K/V for one request, as a partial install source
+        (the jitted call is memoized per config).  The stacked per-layer
+        rows are split along the segment boundaries, so a multi-segment
+        decoder gets every segment's share — no seg0 special case."""
+        kv = _cross_src_fn(cfg)(params, batch["audio_embeds"])
+        src, off = {}, 0
+        for si, (kind, n) in enumerate(layer_segments(cfg)):
+            if self in adapters_for(cfg, kind):
+                src[f"seg{si}"] = {"cross": jax.tree.map(
+                    lambda a: a[off:off + n], kv
+                )}
+            off += n
+        return src
+
+    def chunk(self, p, cfg, h, positions, cache, ctx, pos_offset):
+        rows = read_slot_rows(cache, ctx["slot"])
+        return attn.cross_attention(p, cfg, h, rows["k"], rows["v"]), cache
+
+    def decode(self, p, cfg, h, positions, cache, *, seq_pos, page_table,
+               active):
+        # read-only: inactive slots produce garbage that is discarded, and
+        # there is no write to mask
+        return attn.cross_attention(p, cfg, h, cache["k"], cache["v"]), cache
+
+
+@functools.lru_cache(maxsize=None)
+def _cross_src_fn(cfg: ModelConfig):
+    from repro.models import model as M
+
+    return jax.jit(functools.partial(M.encdec_cross_kv, cfg))
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+PAGED_GQA = PagedAttnAdapter()
+RING_SWA = RingAttnAdapter()
+MLA_LATENT = LatentMLAAdapter()
+SSM_STATE = SSMStateAdapter()
+CROSS_ENC = CrossAttnAdapter()
+
+_ATTN_ADAPTERS = {"full": PAGED_GQA, "swa": RING_SWA, "mla": MLA_LATENT}
+
+
+def adapters_for(cfg: ModelConfig, kind: str) -> List[CacheAdapter]:
+    """Adapters serving one segment kind, in mixer order (attention first —
+    the hybrid fusion averages outputs in this order)."""
+    ads: List[CacheAdapter] = []
+    if kind in ("dense", "moe", "hybrid"):
+        ads.append(_ATTN_ADAPTERS[cfg.attn_type])
+        if cfg.n_encoder_layers:
+            ads.append(CROSS_ENC)
+    if kind in ("ssm", "hybrid"):
+        ads.append(SSM_STATE)
+    return ads
+
+
+def all_adapters(cfg: ModelConfig) -> List[CacheAdapter]:
+    """Every adapter the config's segments use (deduplicated, in order)."""
+    seen: List[CacheAdapter] = []
+    for kind, _n in layer_segments(cfg):
+        for ad in adapters_for(cfg, kind):
+            if ad not in seen:
+                seen.append(ad)
+    return seen
+
+
+def admission_adapters(cfg: ModelConfig) -> List[CacheAdapter]:
+    """Adapters that install request-level context once at admission,
+    outside the token-chunk loop (e.g. enc-dec encoder K/V)."""
+    return [
+        ad for ad in all_adapters(cfg)
+        if getattr(ad, "installs_at_admission", False)
+    ]
+
+
+def prefill_chunk_multiple(cfg: ModelConfig) -> int:
+    """Grid every prefill chunk boundary must sit on (lcm over adapters)."""
+    m = 1
+    for ad in all_adapters(cfg):
+        m = math.lcm(m, ad.chunk_multiple(cfg))
+    return m
+
+
+def supported_families() -> Tuple[str, ...]:
+    """Family names the adapter registry serves (the engine error text and
+    the launch driver report exactly this list)."""
+    return (
+        PAGED_GQA.family,
+        RING_SWA.family,
+        MLA_LATENT.family,
+        SSM_STATE.family,
+        CROSS_ENC.family,
+    )
+
+
+def unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why the continuous-batching engine cannot serve this config (None =
+    it can).  The only hole left: the vision frontend's M-RoPE prefix."""
+    if cfg.frontend == "vision" or cfg.mrope_sections:
+        return (
+            "the vision frontend (M-RoPE position streams + image prefix) "
+            "has no cache adapter yet"
+        )
+    return None
+
+
+def unsupported_message(cfg: ModelConfig, hint: str = "") -> Optional[str]:
+    """The ONE unsupported-family error text (None = config is served):
+    the reason plus exactly the families the registry reports.  Every
+    refusing layer (kvcache, launch driver) formats through here so the
+    copies cannot drift."""
+    reason = unsupported_reason(cfg)
+    if reason is None:
+        return None
+    msg = (f"{cfg.name}: {reason}; the paged engine serves: "
+           + ", ".join(supported_families()))
+    return msg + (f" — {hint}" if hint else "")

@@ -300,6 +300,20 @@ def gqa_ring_prefill_chunk(
     return dense(cfg, out, p["wo"]), new_row
 
 
+def cross_attention(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Non-causal attention over a fixed encoder-side K/V (enc-dec cross).
+
+    The ONE implementation both the static decoder layer and the engine's
+    cross adapter call — q/softmax/output math cannot drift between them
+    (the bit-exactness guarantee leans on this).
+    """
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    out = chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
 def gqa_ring_decode(
     p: Dict,
     cfg: ModelConfig,
@@ -339,6 +353,10 @@ def gqa_ring_decode(
 # --------------------------------------------------------------------------
 # MLA (DeepSeek-V3)
 # --------------------------------------------------------------------------
+# Paged variants live below mla_forward: the engine pages the *latent*
+# c_kv + shared rotary key (kv_lora_rank + qk_rope_dim floats per token
+# instead of 2 * n_kv_heads * d_head) and decodes with the absorbed-matmul
+# formulation straight over the gathered latent pages.
 
 def mla_init(key, cfg: ModelConfig) -> Dict:
     d, H = cfg.d_model, cfg.n_heads
@@ -388,6 +406,58 @@ def _mla_qkv_latent(p, cfg: ModelConfig, x, positions):
     return q_nope, q_rope, ckv, k_rope
 
 
+# The two MLA attention formulations, each implemented ONCE: the linear-
+# cache decode and the paged decode both call _mla_absorbed_attend, the
+# one-shot prefill and the paged prefill chunk both call
+# _mla_expanded_attend — the engine's bit-exactness guarantee against the
+# static Server leans on the math being impossible to drift apart.
+
+def _mla_absorbed_attend(cfg: ModelConfig, wkv_b, q_nope, q_rope,
+                         ckv_c, kr_c, valid):
+    """Absorbed-matmul MLA attention over a latent cache.
+
+    score = q_nope . (W_kv_b,k^T c) + q_rope . k_rope
+          = (q_nope W_k^T) . c + q_rope . k_rope
+    ``valid``: (B, K) key mask.  Returns (B, S, H, v_head_dim).
+    """
+    dn = cfg.qk_nope_dim
+    scale = (dn + cfg.qk_rope_dim) ** -0.5
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkv_b[..., :dn])
+    s = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_c,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshd,bkd->bhsk", q_rope, kr_c,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+    att = jax.nn.softmax(s, -1).astype(ckv_c.dtype)  # (B, H, S, K)
+    o_lat = jnp.einsum("bhsk,bkr->bshr", att, ckv_c)
+    return jnp.einsum("bshr,rhd->bshd", o_lat, wkv_b[..., dn:])  # value expand
+
+
+def _mla_expanded_attend(cfg: ModelConfig, wkv_b, q_nope, q_rope,
+                         ckv, k_rope, *, pos_offset, k_positions=None):
+    """Expanded-formulation MLA attention (train / prefill / prefill chunk).
+
+    Each key position's kv expansion depends only on its own latent, so the
+    same call serves contiguous latents and page-gathered ones (with
+    ``k_positions`` labelling the gathered order).
+    """
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    scale = (dn + dr) ** -0.5
+    B, K = ckv.shape[:2]
+    kv = jnp.einsum("bsr,rhd->bshd", ckv, wkv_b)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, K, H, dr))], -1
+    )
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    return chunked_attention(
+        q, k, v, causal=True, q_offset=pos_offset, k_positions=k_positions,
+        q_chunk=cfg.q_chunk, scale=scale,
+    )
+
+
 def mla_forward(
     p: Dict,
     cfg: ModelConfig,
@@ -400,9 +470,8 @@ def mla_forward(
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, S, _ = x.shape
     H = cfg.n_heads
-    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     r_kv = cfg.kv_lora_rank
-    scale = (dn + dr) ** -0.5
     q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, cfg, x, positions)
     wkv_b = p["wkv_b"].reshape(r_kv, H, dn + dv)
 
@@ -412,35 +481,127 @@ def mla_forward(
         kr_c = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, pos_offset, 0))
         pos_new = jnp.full((B, 1), pos_offset, jnp.int32)
         pos_c = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, pos_offset))
-        # absorbed formulation: score = q_nope · (W_kv_b,k^T c) + q_rope · k_rope
-        #                             = (q_nope W_k^T) · c + q_rope · k_rope
-        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkv_b[..., :dn])  # (B,1,H,r)
-        s = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_c,
-                       preferred_element_type=jnp.float32)
-        s += jnp.einsum("bshd,bkd->bhsk", q_rope, kr_c,
-                        preferred_element_type=jnp.float32)
-        s *= scale
         valid = (pos_c >= 0) & (pos_c <= pos_offset)
-        s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
-        att = jax.nn.softmax(s, -1).astype(ckv.dtype)  # (B, H, 1, Sc)
-        o_lat = jnp.einsum("bhsk,bkr->bshr", att, ckv_c)  # (B, 1, H, r)
-        out = jnp.einsum("bshr,rhd->bshd", o_lat, wkv_b[..., dn:])  # value expand
+        out = _mla_absorbed_attend(cfg, wkv_b, q_nope, q_rope, ckv_c, kr_c,
+                                   valid)
         new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": pos_c}
     else:
-        # expanded formulation (train / prefill)
-        kv = jnp.einsum("bsr,rhd->bshd", ckv, wkv_b)
-        k_nope, v = kv[..., :dn], kv[..., dn:]
-        k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1
-        )
-        q = jnp.concatenate([q_nope, q_rope], -1)
-        out = chunked_attention(
-            q, k, v, causal=True, q_offset=pos_offset, q_chunk=cfg.q_chunk,
-            scale=scale,
-        )
+        out = _mla_expanded_attend(cfg, wkv_b, q_nope, q_rope, ckv, k_rope,
+                                   pos_offset=pos_offset)
         new_cache = None
         if mode == "prefill":
             pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
             new_cache = {"ckv": ckv, "krope": k_rope, "pos": pos}
     out = out.reshape(B, S, H * dv)
     return out @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------------
+# Paged MLA (latent pages — the continuous-batching engine's MLA cache)
+# --------------------------------------------------------------------------
+
+def mla_paged_cache_init(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict:
+    """One layer's share of the latent page pool.
+
+    A page holds ``page_size`` token slots of the MLA *latent* cache — the
+    rank-``kv_lora_rank`` c_kv plus the shared ``qk_rope_dim`` rotary key —
+    which is all the absorbed-matmul decode ever reads.  Same page-id space
+    and null-page discipline as the dense K/V pool.
+    """
+    return {
+        "ckv_pages": jnp.zeros(
+            (num_pages, page_size, cfg.kv_lora_rank), cfg.dtype
+        ),
+        "krope_pages": jnp.zeros(
+            (num_pages, page_size, cfg.qk_rope_dim), cfg.dtype
+        ),
+    }
+
+
+def mla_paged_decode(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, d) — one token per slot
+    positions: jnp.ndarray,  # (B, 1) per-slot absolute positions (RoPE)
+    cache: Dict,  # {"ckv_pages", "krope_pages"}
+    page_table: jnp.ndarray,  # (B, max_pages) physical page per logical page
+    seq_pos: jnp.ndarray,  # (B,) absolute position of the new token
+    active: Optional[jnp.ndarray] = None,  # (B,) slots actually decoding
+) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-matmul decode against the latent page pool.
+
+    Write: the new token's (c_kv, k_rope) lands in its slot's page.  Read:
+    gather the latent pages back into logical order and score via the
+    absorbed formulation — q_nope is folded into the latent space through
+    ``W_kv_b`` so attention runs over rank-r latents, never materializing
+    per-head K/V.  Gathered entries sit at their absolute positions, so
+    masking by ``k_pos <= seq_pos`` reproduces the linear cache's valid set
+    exactly (stale pages / partial-page tails mask out like empty slots).
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.n_heads
+    dn, dv, r_kv = cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, cfg, x, positions)
+    wkv_b = p["wkv_b"].reshape(r_kv, H, dn + dv)
+
+    page = cache["ckv_pages"].shape[1]
+    logical = seq_pos // page
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, 0)  # null page absorbs idle writes
+    off = seq_pos % page
+    ckv_pages = cache["ckv_pages"].at[phys, off].set(ckv[:, 0])
+    krope_pages = cache["krope_pages"].at[phys, off].set(k_rope[:, 0])
+
+    maxp = page_table.shape[1]
+    ckv_g = ckv_pages[page_table].reshape(B, maxp * page, r_kv)
+    kr_g = krope_pages[page_table].reshape(B, maxp * page, cfg.qk_rope_dim)
+    # gathered keys sit at their absolute positions by construction
+    k_positions = jnp.arange(maxp * page, dtype=jnp.int32)
+    valid = k_positions[None] <= seq_pos[:, None]  # (B, K)
+    out = _mla_absorbed_attend(cfg, wkv_b, q_nope, q_rope, ckv_g, kr_g, valid)
+    out = out.reshape(B, 1, H * dv)
+    return out @ p["wo"], {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
+
+
+def mla_paged_prefill_chunk(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (1, C, d) — one prompt chunk for one slot
+    positions: jnp.ndarray,  # (1, C) absolute positions q_off + [0, C)
+    cache: Dict,  # {"ckv_pages", "krope_pages"}
+    table_row: jnp.ndarray,  # (max_pages,) this slot's page table row
+    phys_tok: jnp.ndarray,  # (C,) physical page per chunk token
+    off_tok: jnp.ndarray,  # (C,) in-page offset per chunk token
+    q_off,  # scalar absolute position of x[:, 0]
+) -> Tuple[jnp.ndarray, Dict]:
+    """One prompt chunk against the latent page pool (prefix-conditioned).
+
+    Write first (per-token latent scatter), then gather the slot's whole
+    table row and run the *expanded* formulation over the gathered latent —
+    the same per-position kv expansion and causal masked attention the
+    one-shot prefill uses, so every unmasked key matches the one-shot key
+    sequence in ascending-position order (bit-exactness).  The absorbed
+    formulation is reserved for decode, where it is the win.
+    """
+    B, C, _ = x.shape
+    assert B == 1
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, cfg, x, positions)
+    wkv_b = p["wkv_b"].reshape(r_kv, H, dn + dv)
+
+    ckv_pages = cache["ckv_pages"].at[phys_tok, off_tok].set(ckv[0])
+    krope_pages = cache["krope_pages"].at[phys_tok, off_tok].set(k_rope[0])
+    page = ckv_pages.shape[1]
+    maxp = table_row.shape[0]
+    K = maxp * page
+    ckv_g = ckv_pages[table_row].reshape(1, K, r_kv)
+    kr_g = krope_pages[table_row].reshape(1, K, dr)
+    kpos = jnp.arange(K, dtype=jnp.int32)[None]
+    out = _mla_expanded_attend(cfg, wkv_b, q_nope, q_rope, ckv_g, kr_g,
+                               pos_offset=q_off, k_positions=kpos)
+    out = out.reshape(B, C, H * dv)
+    return out @ p["wo"], {"ckv_pages": ckv_pages, "krope_pages": krope_pages}

@@ -10,36 +10,23 @@ Execution modes: ``train`` (loss), ``prefill`` (populate caches),
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.axes import constrain
+from repro.models import adapters as A
 from repro.models import attention as attn
 from repro.models import ffn as ffnm
 from repro.models import ssm as ssmm
 from repro.models.common import apply_norm, default_positions, dense_init, norm_init
 
-
-# --------------------------------------------------------------------------
-# Segments
-# --------------------------------------------------------------------------
-
-def layer_segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
-    if cfg.family == "ssm":
-        return [("ssm", cfg.n_layers)]
-    if cfg.family == "hybrid":
-        return [("hybrid", cfg.n_layers)]
-    if cfg.family == "moe":
-        segs = []
-        if cfg.first_k_dense:
-            segs.append(("dense", cfg.first_k_dense))
-        segs.append(("moe", cfg.n_layers - cfg.first_k_dense))
-        return segs
-    return [("dense", cfg.n_layers)]  # dense / vlm / encdec decoder
+# Segment structure lives with the cache-adapter registry (the one place
+# that knows which layer family uses which layout); re-exported here because
+# the whole system addresses it as M.layer_segments.
+layer_segments = A.layer_segments
 
 
 def _attn_init(key, cfg: ModelConfig):
@@ -78,29 +65,21 @@ def layer_forward(
     active=None,  # (B,) bool: slots whose decode writes may land
     chunk: Optional[Dict] = None,  # chunked-prefill context (mode "chunk")
 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    if chunk is not None or (mode == "decode" and seq_pos is not None):
+        return _layer_forward_engine(
+            cfg, kind, p, x, positions, mode=mode, cache=cache,
+            pos_offset=pos_offset, seq_pos=seq_pos, page_table=page_table,
+            active=active, chunk=chunk,
+        )
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
     h = apply_norm(cfg, p["ln1"], x)
 
-    def ssm_branch(h):
-        """SSM forward against per-slot state; mode 'chunk' carries one
-        slot's row across prompt chunks, decode masks inactive slots."""
-        c_ssm = cache.get("ssm") if cache else None
-        if mode == "chunk":
-            out, row = _ssm_chunk_slot(cfg, p["ssm"], h, c_ssm, chunk)
-            return out, _write_slot_rows(c_ssm, row, chunk["slot"])
-        out, st = ssmm.ssm_forward(p["ssm"], cfg, h, mode=mode, state=c_ssm)
-        if st is not None and mode == "decode" and active is not None:
-            st = jax.tree.map(
-                lambda new, old: jnp.where(
-                    active.reshape((-1,) + (1,) * (new.ndim - 1)),
-                    new.astype(old.dtype), old,
-                ), st, c_ssm,
-            )
-        return out, st
-
     if kind == "ssm":
-        out, st = ssm_branch(h)
+        out, st = ssmm.ssm_forward(
+            p["ssm"], cfg, h, mode=mode,
+            state=cache.get("ssm") if cache else None,
+        )
         if st is not None:
             new_cache["ssm"] = st
         return x + out, (new_cache or None), aux
@@ -110,31 +89,6 @@ def layer_forward(
             p["attn"], cfg, h, positions, mode=mode,
             cache=cache.get("attn") if cache else None, pos_offset=pos_offset,
         )
-    elif mode == "chunk":
-        c_attn = cache.get("attn") if cache else None
-        if c_attn is not None and "k_pages" in c_attn:
-            a_out, a_cache = attn.gqa_paged_prefill_chunk(
-                p["attn"], cfg, h, positions, c_attn, chunk["table_row"],
-                chunk["phys_tok"], chunk["off_tok"], pos_offset,
-            )
-        else:
-            a_out, row = _ring_chunk_slot(cfg, p["attn"], h, positions,
-                                          c_attn, chunk, pos_offset)
-            a_cache = _write_slot_rows(c_attn, row, chunk["slot"])
-    elif mode == "decode" and seq_pos is not None:
-        # per-slot cache interface: block-paged (full attention) or ring (SWA)
-        c_attn = cache.get("attn") if cache else None
-        if c_attn is not None and "k_pages" in c_attn:
-            a_out, a_cache = attn.gqa_paged_decode(
-                p["attn"], cfg, h, positions, c_attn, page_table, seq_pos,
-                active=active,
-            )
-        else:
-            a_out, a_cache = attn.gqa_ring_decode(
-                p["attn"], cfg, h, positions, c_attn, seq_pos,
-                window=cfg.window if cfg.attn_type == "swa" else None,
-                active=active,
-            )
     else:
         a_out, a_cache = attn.gqa_forward(
             p["attn"], cfg, h, positions, mode=mode,
@@ -143,7 +97,10 @@ def layer_forward(
     if a_cache is not None:
         new_cache["attn"] = a_cache
     if kind == "hybrid":
-        s_out, st = ssm_branch(h)
+        s_out, st = ssmm.ssm_forward(
+            p["ssm"], cfg, h, mode=mode,
+            state=cache.get("ssm") if cache else None,
+        )
         if st is not None:
             new_cache["ssm"] = st
         mixer_out = 0.5 * (a_out + s_out)  # Hymba: fused parallel heads
@@ -161,58 +118,56 @@ def layer_forward(
     return x, (new_cache or None), aux
 
 
-# --------------------------------------------------------------------------
-# Chunked-prefill slot helpers (continuous-batching engine)
-# --------------------------------------------------------------------------
+def _layer_forward_engine(
+    cfg: ModelConfig, kind: str, p: Dict, x, positions, *, mode, cache,
+    pos_offset, seq_pos, page_table, active, chunk,
+):
+    """Engine-mode layer step (chunked prefill / per-slot paged decode).
 
-def _read_slot_rows(seg_cache: Dict, slot) -> Dict:
-    """Extract one batch slot's rows as a (1, ...) pytree (traced slot id)."""
-    return {
-        k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
-        for k, v in seg_cache.items()
-    }
-
-
-def _write_slot_rows(seg_cache: Dict, rows: Dict, slot) -> Dict:
-    """Scatter (1, ...) rows back into the per-slot cache arrays."""
-    return {
-        k: jax.lax.dynamic_update_slice_in_dim(
-            seg_cache[k], rows[k].astype(seg_cache[k].dtype), slot, 0
-        )
-        for k in seg_cache
-    }
-
-
-def _ssm_chunk_slot(cfg: ModelConfig, p, h, c_ssm: Dict, chunk: Dict):
-    """One prompt chunk through the SSM, carrying one slot's state row.
-
-    On the first chunk the row is zeroed (a fresh request's state; the row
-    may hold garbage from a previous occupant) — zero state/history is
-    bit-identical to prefilling with no carried state at all.
+    The cache semantics — pool layout, slot addressing, chunk scatter,
+    decode gather, active masking — live entirely in the family's
+    :class:`~repro.models.adapters.CacheAdapter`; this function only wires
+    adapter outputs into the residual stream (attention first, hybrid
+    fusion, cross-attention after the self mixer, then FFN/MoE).
     """
-    row = _read_slot_rows(c_ssm, chunk["slot"])
-    first = chunk["first"]  # () bool — q_off == 0
-    state_in = {
-        "state": jnp.where(first, 0.0, row["state"]),
-        "conv": jnp.where(first, 0.0, row["conv"]),
-    }
-    out, st = ssmm.ssm_forward(p, cfg, h, mode="prefill", state=state_in)
-    return out, st
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = apply_norm(cfg, p["ln1"], x)
 
+    def run(ad, sub_p, hh):
+        if mode == "chunk":
+            return ad.chunk(sub_p, cfg, hh, positions, cache[ad.key], chunk,
+                            pos_offset)
+        return ad.decode(sub_p, cfg, hh, positions, cache[ad.key],
+                         seq_pos=seq_pos, page_table=page_table, active=active)
 
-def _ring_chunk_slot(cfg: ModelConfig, p, h, positions, c_attn: Dict,
-                     chunk: Dict, pos_offset):
-    """One prompt chunk through SWA attention, carrying one slot's ring row.
-
-    The first chunk resets the row's position labels to -1 (masked-empty)
-    so a re-used slot cannot leak a previous occupant's window.
-    """
-    row = _read_slot_rows(c_attn, chunk["slot"])
-    first = chunk["first"]
-    row["pos"] = jnp.where(first, -1, row["pos"])
-    return attn.gqa_ring_prefill_chunk(
-        p, cfg, h, positions, row, pos_offset, window=cfg.window
-    )
+    cross = None
+    outs = []
+    for ad in A.adapters_for(cfg, kind):
+        if ad.key == "cross":
+            cross = ad  # applies after the self mixer's residual add
+            continue
+        out, c_new = run(ad, p[ad.param_key], h)
+        new_cache[ad.key] = c_new
+        outs.append(out)
+    if kind == "ssm":
+        return x + outs[0], new_cache, aux
+    # hybrid (Hymba) fuses parallel attention + SSM heads by mean
+    x = x + (outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1]))
+    if cross is not None:
+        hc = apply_norm(cfg, p["cross"]["ln"], x)
+        out_c, c_cross = run(cross, p["cross"]["attn"], hc)
+        new_cache["cross"] = c_cross
+        x = x + out_c
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        m_out, m_aux = ffnm.moe_forward(p["moe"], cfg, h2)
+        x = x + m_out
+        aux = aux + m_aux
+    else:
+        x = x + ffnm.ffn_forward(p["ffn"], cfg, h2)
+    x = constrain(x, ("dp", None, None))
+    return x, new_cache, aux
 
 
 # --------------------------------------------------------------------------
@@ -242,34 +197,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
             lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one
         )
     if cfg.n_encoder_layers:  # whisper: cross-attention K/V filled at prefill
-        d = cfg.n_heads * cfg.d_head
-        segs["cross"] = {
-            "k": jnp.zeros(
-                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head),
-                cfg.dtype,
-            ),
-            "v": jnp.zeros(
-                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head),
-                cfg.dtype,
-            ),
+        shape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                 cfg.d_head)
+        segs["seg0"]["cross"] = {
+            "k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype),
         }
     return segs
-
-
-def supports_paged_decode(cfg: ModelConfig) -> bool:
-    """Families the continuous-batching engine can serve today.
-
-    Dense/GQA attention goes through the block-paged cache; SWA and SSM keep
-    their O(window)/O(1) layouts behind the same per-slot interface.  MLA,
-    encoder-decoder, and the modality frontends still need the static-wave
-    engine (their caches are not per-slot addressable yet).
-    """
-    return (
-        cfg.attn_type != "mla"
-        and cfg.n_encoder_layers == 0
-        and cfg.frontend == "none"
-        and not cfg.mrope_sections
-    )
 
 
 def supports_padded_prefill(cfg: ModelConfig) -> bool:
@@ -298,27 +232,17 @@ def init_paged_cache(
 ):
     """Stacked-per-segment decode cache for the continuous-batching engine.
 
-    Full-attention layers share one physical page pool per layer (page ids
-    are pool-wide, see :func:`repro.models.attention.paged_cache_init`); SWA
-    rings and SSM states are per-slot (``max_seqs`` rows).
+    Each segment's cache is whatever its family's adapters declare: paged
+    pools share physical page ids across layers (page ids are pool-wide);
+    non-paged adapters own ``max_seqs`` per-slot rows.
     """
-    if not supports_paged_decode(cfg):
-        raise NotImplementedError(
-            f"paged decode not supported for {cfg.name} "
-            f"(attn_type={cfg.attn_type}, frontend={cfg.frontend})"
-        )
+    msg = A.unsupported_message(cfg)
+    if msg is not None:
+        raise NotImplementedError(msg)
+    geom = A.CacheGeometry(max_seqs, num_pages, page_size, max_len)
     segs = {}
     for si, (kind, n) in enumerate(layer_segments(cfg)):
-        c: Dict[str, Any] = {}
-        if kind in ("dense", "moe", "hybrid"):
-            if cfg.attn_type == "swa":
-                c["attn"] = attn.gqa_cache_init(
-                    cfg, max_seqs, max_len, window_only=True
-                )
-            else:
-                c["attn"] = attn.paged_cache_init(cfg, num_pages, page_size)
-        if kind in ("ssm", "hybrid"):
-            c["ssm"] = ssmm.ssm_state_init(cfg, max_seqs)
+        c = {ad.key: ad.init_pool(cfg, geom) for ad in A.adapters_for(cfg, kind)}
         segs[f"seg{si}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c
         )
@@ -339,6 +263,9 @@ def decode_step_paged(cfg: ModelConfig, params, caches, tokens, seq_pos,
     Returns (logits (B, 1, V), new caches).
     """
     h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_encoder_layers:
+        # learned decoder positions, gathered per slot (enc-dec decode)
+        h = h + jnp.take(params["dec_pos"], seq_pos, axis=0)[:, None]
     positions = seq_pos[:, None]  # (B, 1) per-slot RoPE positions
     h, new_caches, _ = _run_segments(
         cfg, params, h, positions, mode="decode", caches=caches,
@@ -372,6 +299,9 @@ def prefill_chunk(
     assert B == 1
     h = jnp.take(params["embed"], tokens, axis=0)
     positions = (q_off + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
+    if cfg.n_encoder_layers:
+        # learned decoder positions for this chunk's absolute range
+        h = h + jnp.take(params["dec_pos"], positions[0], axis=0)[None]
     chunk = {
         "slot": slot, "first": q_off == 0, "table_row": table_row,
         "phys_tok": phys_tok, "off_tok": off_tok,
@@ -451,6 +381,24 @@ def _cross_init(key, cfg: ModelConfig):
 # Forward passes
 # --------------------------------------------------------------------------
 
+def frontend_extras(cfg: ModelConfig, batch: Dict, B: int, S: int) -> Dict:
+    """Fill *missing* modality inputs with stub zero embeddings (vision /
+    audio frontends).  Inputs already present (e.g. a request's real
+    ``audio_embeds``) are left untouched."""
+    if cfg.frontend == "vision":
+        batch.setdefault("vis_embeds", jnp.zeros(
+            (B, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype
+        ))
+        batch.setdefault("positions3", jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
+        ))
+    if cfg.frontend == "audio":
+        batch.setdefault("audio_embeds", jnp.zeros(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        ))
+    return batch
+
+
 def _embed_inputs(cfg: ModelConfig, params, batch: Dict) -> Tuple[jnp.ndarray, Any]:
     tokens = batch["tokens"]
     h = jnp.take(params["embed"], tokens, axis=0)
@@ -474,8 +422,20 @@ def _run_segments(
     """Scan each stacked segment; returns (h, new_caches, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = {}
+    engine = chunk is not None or (mode == "decode" and seq_pos is not None)
+    seg_off = 0
     for si, (kind, n) in enumerate(layer_segments(cfg)):
         stacked = params[f"seg{si}"]
+        if engine and cfg.n_encoder_layers and "cross" in params:
+            # enc-dec engine path: the per-layer cross-attention params ride
+            # the same scan as the decoder layers they belong to (sliced to
+            # this segment's share of the layer stack, matching how the
+            # cross adapter splits its admission install)
+            stacked = dict(stacked)
+            stacked["cross"] = jax.tree.map(
+                lambda a: a[seg_off:seg_off + n], params["cross"]
+            )
+        seg_off += n
         cache_seg = caches.get(f"seg{si}") if caches else None
 
         def body(carry, inp, _kind=kind):
@@ -625,18 +585,15 @@ def _dec_layer(cfg, p_layer, p_cross, x, positions, enc_out, *, mode,
     # cross attention (non-causal over encoder output)
     hc = apply_norm(cfg, p_cross["ln"], x)
     pc = p_cross["attn"]
-    B, S, _ = hc.shape
-    q = (hc @ pc["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
-    if mode == "decode" and cache is not None and "cross_k" in cache:
-        ck, cv = cache["cross_k"], cache["cross_v"]
+    B = hc.shape[0]
+    if mode == "decode" and cache is not None and "cross" in cache:
+        ck, cv = cache["cross"]["k"], cache["cross"]["v"]
     else:
         ck = (enc_out @ pc["wk"]).reshape(
             B, -1, cfg.n_kv_heads, cfg.d_head)
         cv = (enc_out @ pc["wv"]).reshape(
             B, -1, cfg.n_kv_heads, cfg.d_head)
-    from repro.models.common import chunked_attention
-    cross = chunked_attention(q, ck, cv, causal=False, q_chunk=cfg.q_chunk)
-    x = x + cross.reshape(B, S, -1) @ pc["wo"]
+    x = x + attn.cross_attention(pc, cfg, hc, ck, cv)
     x = x + ffnm.ffn_forward(
         p_layer["ffn"], cfg, apply_norm(cfg, p_layer["ln2"], x)
     )
@@ -704,12 +661,12 @@ def _prefill_encdec(cfg: ModelConfig, params, batch):
             cfg, p_layer, p_cross, x, positions, enc_out,
             mode="prefill", cache=None, pos_offset=0,
         )
-        return x, (c_new, ck, cv)
+        c_new["cross"] = {"k": ck, "v": cv}
+        return x, c_new
 
-    h, (self_caches, cks, cvs) = jax.lax.scan(body, h, (params["seg0"], params["cross"]))
+    h, caches_seg = jax.lax.scan(body, h, (params["seg0"], params["cross"]))
     h = apply_norm(cfg, params["final_norm"], h[:, -1:])
-    caches = {"seg0": self_caches, "cross": {"k": cks, "v": cvs}}
-    return _lm_logits(cfg, params, h), caches
+    return _lm_logits(cfg, params, h), {"seg0": caches_seg}
 
 
 def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
@@ -738,21 +695,37 @@ def _decode_encdec(cfg: ModelConfig, params, caches, h, positions, pos):
 
     def body(carry, inp):
         x = carry
-        p_layer, p_cross, c_self, ck, cv = inp
-        c_layer = dict(c_self)
-        c_layer["cross_k"] = ck
-        c_layer["cross_v"] = cv
+        p_layer, p_cross, c_layer = inp
         x, c_new, _ = _dec_layer(
             cfg, p_layer, p_cross, x, positions, None,
             mode="decode", cache=c_layer, pos_offset=pos,
         )
+        c_new["cross"] = c_layer["cross"]  # immutable encoder-side K/V
         return x, c_new
 
-    h, new_self = jax.lax.scan(
-        body, h,
-        (params["seg0"], params["cross"], caches["seg0"],
-         caches["cross"]["k"], caches["cross"]["v"]),
+    h, new_seg = jax.lax.scan(
+        body, h, (params["seg0"], params["cross"], caches["seg0"])
     )
     h = apply_norm(cfg, params["final_norm"], h)
-    new_caches = {"seg0": new_self, "cross": caches["cross"]}
-    return _lm_logits(cfg, params, h), new_caches
+    return _lm_logits(cfg, params, h), {"seg0": new_seg}
+
+
+def encdec_cross_kv(cfg: ModelConfig, params, audio_embeds):
+    """Encoder forward + per-decoder-layer cross K/V projections.
+
+    The continuous-batching engine runs this ONCE per admission and installs
+    the result into the slot's immutable cross rows — chunked decoder
+    prefill and decode never touch the encoder again.  Returns stacked
+    {"k", "v"} of shape (n_layers, B, encoder_seq, n_kv_heads, d_head).
+    """
+    enc_out = _encoder_forward(cfg, params, audio_embeds)
+    B = enc_out.shape[0]
+
+    def body(carry, p_cross):
+        pc = p_cross["attn"]
+        ck = (enc_out @ pc["wk"]).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        cv = (enc_out @ pc["wv"]).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        return carry, {"k": ck, "v": cv}
+
+    _, kv = jax.lax.scan(body, 0, params["cross"])
+    return kv

@@ -8,6 +8,7 @@ from repro.serve.engine import (
     make_requests,
     run_static_waves,
 )
+from repro.models.adapters import supported_families, unsupported_reason
 from repro.serve.kvcache import PageAllocator, PagedCacheConfig, PagedKVCache
 from repro.serve.scheduler import Request, RequestStats, Scheduler
 
@@ -26,4 +27,6 @@ __all__ = [
     "frontend_extras",
     "make_requests",
     "run_static_waves",
+    "supported_families",
+    "unsupported_reason",
 ]

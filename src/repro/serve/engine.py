@@ -22,10 +22,12 @@ reuses one full-chunk shape plus a small set of final-chunk shapes
 (power-of-two buckets for dense/GQA; exact lengths — capped by the chunk
 size — where semantics require it: SWA ring packing, SSM final states).
 
-Cache families: dense/GQA attention decodes by gather over pages whose size
-is the accelerator kernel block; SWA and SSM keep their O(window)/O(1)
-layouts behind the same per-slot interface.  MLA and encoder-decoder still
-require :class:`Server`.
+Cache families are the registry's business (:mod:`repro.models.adapters`):
+one :class:`~repro.models.adapters.CacheAdapter` per layer family owns its
+pool shapes, chunk scatter, decode gather and active-mask semantics —
+dense/GQA K/V pages, MLA latent pages, SWA rings, SSM state rows, enc-dec
+cross rows (installed once at admission).  The engine drives adapters
+generically; only the vision frontend still requires :class:`Server`.
 """
 from __future__ import annotations
 
@@ -41,7 +43,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed import axes as AX
+from repro.models import adapters as A
 from repro.models import model as M
+from repro.models.model import frontend_extras  # re-exported for callers
 from repro.serve.kvcache import PagedCacheConfig, PagedKVCache
 from repro.serve.scheduler import Request, Scheduler
 
@@ -217,15 +221,21 @@ class EngineConfig:
     pool for ``max_seqs`` full-length sequences.
 
     ``prefill_chunk=0`` derives the chunk from the page size (one chunk =
-    one page of tokens), lifted to a multiple of ``cfg.ssm_chunk`` for
-    models with SSM segments so chunk boundaries stay on the SSD chunk grid
-    (the alignment that keeps chunked prefill bit-identical to one-shot).
-    ``prefill_chunks_per_step`` is the admission budget: how many prompt
-    chunks may run per engine step before the decode batch steps — small
+    one page of tokens), lifted onto each adapter's chunk grid (e.g. the
+    SSD ``ssm_chunk`` grid — the alignment that keeps chunked prefill
+    bit-identical to one-shot).
+
+    ``prefill_tokens_per_step`` is the admission budget: how many prompt
+    *tokens* may run per engine step before the decode batch steps — small
     values bound the latency a long prompt can inject between two decode
-    steps of the running batch.  ``chunked_prefill=False`` falls back to
-    one-shot prefill per admission (still installed through the jitted
-    donating updater).
+    steps of the running batch.  The budget is spent page-granularly (the
+    chunk is the execution quantum, and chunks are page-sized), so the
+    effective budget rounds up to whole chunks.  ``0`` derives it from the
+    DEPRECATED chunk-count alias ``prefill_chunks_per_step`` (budget =
+    chunks x chunk size), kept so existing callers keep their behavior.
+
+    ``chunked_prefill=False`` falls back to one-shot prefill per admission
+    (still installed through the jitted donating updater).
     """
 
     max_seqs: int = 4
@@ -234,7 +244,8 @@ class EngineConfig:
     num_pages: int = 0
     chunked_prefill: bool = True
     prefill_chunk: int = 0
-    prefill_chunks_per_step: int = 4
+    prefill_tokens_per_step: int = 0  # 0: derive from the deprecated alias
+    prefill_chunks_per_step: int = 4  # DEPRECATED: chunk-count alias
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
@@ -244,20 +255,29 @@ class Engine:
     """Continuous-batching serving engine (scheduler + paged KV cache)."""
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, mesh=None):
-        if not M.supports_paged_decode(cfg):
-            raise NotImplementedError(
-                f"{cfg.name}: continuous batching serves dense/GQA, SWA and "
-                "SSM families; use Server for MLA/enc-dec/frontend models"
-            )
         self.cfg, self.params, self.ec, self.mesh = cfg, params, ec, mesh
+        # unsupported families are refused by the PagedKVCache constructor
+        # (before any pool is allocated), with the registry's family list
         self.kv = PagedKVCache(cfg, PagedCacheConfig(
             max_seqs=ec.max_seqs, max_len=ec.max_len,
             page_size=ec.page_size, num_pages=ec.num_pages,
         ))
         self.sched = Scheduler(self.kv, ec.max_seqs)
         self.chunk_size = self._resolve_chunk(ec.prefill_chunk)
-        if ec.prefill_chunks_per_step < 1:
+        if ec.prefill_tokens_per_step < 0:
+            raise ValueError("prefill_tokens_per_step must be >= 0")
+        if ec.prefill_tokens_per_step == 0 and ec.prefill_chunks_per_step < 1:
+            # the deprecated alias is only validated when it is actually used
             raise ValueError("prefill_chunks_per_step must be >= 1")
+        # token-level admission budget; the deprecated chunk-count knob
+        # aliases to (chunks x chunk size) when no token budget is given
+        self.tokens_per_step = (
+            ec.prefill_tokens_per_step
+            or ec.prefill_chunks_per_step * self.chunk_size
+        )
+        # adapters installing request-level context once at admission
+        # (enc-dec encoder K/V) — resolved from the registry, not by family
+        self._admission_ads = A.admission_adapters(cfg)
 
         if mesh is not None:
             # per-instance closures: jit must trace under the mesh context
@@ -295,17 +315,28 @@ class Engine:
         *,
         rid: Optional[int] = None,
         arrival_step: int = 0,
+        extras: Optional[Dict] = None,
     ) -> Request:
+        """``extras``: per-request modality inputs beyond the token prompt
+        (e.g. a (1, encoder_seq, d_model) ``audio_embeds`` for enc-dec).
+        Missing entries are stub-filled at prefill time, matching the
+        static-wave baseline; extras survive preemption (re-admission
+        re-runs the encoder — recompute discipline)."""
         if rid is None:
             rid = self._rid_counter
         self._rid_counter = max(self._rid_counter, rid) + 1
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         req = Request(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
-            arrival_step=arrival_step,
+            arrival_step=arrival_step, extras=extras,
         )
         self.sched.submit(req)
         return req
+
+    def _extras_batch(self, req: Request) -> Dict:
+        """The request's modality inputs, stub-filled where missing."""
+        batch = dict(req.extras or {})
+        return frontend_extras(self.cfg, batch, 1, req.prompt_len)
 
     # -- sampling -----------------------------------------------------------
 
@@ -347,29 +378,25 @@ class Engine:
     # -- prefill ------------------------------------------------------------
 
     def _resolve_chunk(self, requested: int) -> int:
-        """Prefill chunk size: page-sized by default, SSD-grid-aligned.
+        """Prefill chunk size: page-sized by default, adapter-grid-aligned.
 
-        Chunk boundaries must sit on multiples of ``cfg.ssm_chunk`` for
-        models with SSM segments — the grid the one-shot SSD prefill uses —
-        so every chunk reproduces the exact per-chunk ops of the one-shot
-        path (bit-exactness).  Attention families accept any boundary.
+        Every adapter reports the grid its chunk boundaries must sit on
+        (the SSD ``ssm_chunk`` grid for SSM states — the grid the one-shot
+        prefill uses, so every chunk reproduces the exact per-chunk ops of
+        the one-shot path, bit-exactness); attention families accept any
+        boundary (grid 1).
         """
-        has_ssm = any(
-            kind in ("ssm", "hybrid") for kind, _ in M.layer_segments(self.cfg)
-        )
+        grid = A.prefill_chunk_multiple(self.cfg)
         if requested:
             if requested < 1:
                 raise ValueError(f"prefill_chunk must be >= 1, got {requested}")
-            if has_ssm and requested % self.cfg.ssm_chunk:
+            if requested % grid:
                 raise ValueError(
                     f"prefill_chunk {requested} must be a multiple of "
-                    f"ssm_chunk {self.cfg.ssm_chunk} for SSM/hybrid models"
+                    f"the cache adapters' chunk grid {grid}"
                 )
             return requested
-        chunk = self.kv.page_size
-        if has_ssm:
-            chunk = math.lcm(chunk, self.cfg.ssm_chunk)
-        return chunk
+        return math.lcm(self.kv.page_size, grid)
 
     def _last_chunk_len(self, n: int) -> int:
         """Jit shape for a final (ragged) chunk of ``n`` real tokens.
@@ -384,14 +411,27 @@ class Engine:
             return n
         return min(bucket_tokens(n, 1), self.chunk_size)
 
-    def _prefill_one_chunk(self, slot: int, req: Request) -> None:
+    def _install_admission_context(self, slot: int, req: Request) -> None:
+        """Run the registry's admission-time installs for a fresh slot
+        (e.g. enc-dec: one encoder pass -> immutable cross rows).  Happens
+        again after a preemption — recompute discipline."""
+        for ad in self._admission_ads:
+            src = ad.admission_src(self.cfg, self.params,
+                                   self._extras_batch(req))
+            self.kv.install_partial(slot, src)
+
+    def _prefill_one_chunk(self, slot: int, req: Request) -> int:
         """Feed the next chunk of a slot's prompt through the paged caches.
 
         The chunk step donates the cache pytree — the pool is written in
         place — and on the final chunk samples the request's first token.
+        Returns the number of real prompt tokens consumed (the admission
+        budget's unit).
         """
         prompt = req.effective_prompt
         off = req.prefill_pos
+        if off == 0:
+            self._install_admission_context(slot, req)
         n = min(self.chunk_size, len(prompt) - off)
         # full chunks share ONE jit shape; the final ragged chunk draws from
         # the small bucketed/exact shape set (bounded by the chunk size)
@@ -408,11 +448,13 @@ class Engine:
         self.prefill_tokens += n
         if not req.prefilling:  # final chunk: sample the first token
             self._append_token(slot, req, self._sample(logits[0, -1], req))
+        return n
 
     def _prefill_full(self, slot: int, req: Request) -> None:
         """One-shot prefill + jitted donating install (unchunked path)."""
         prompt = req.effective_prompt
         S = len(prompt)
+        extras = self._extras_batch(req)
         if M.supports_padded_prefill(self.cfg):
             # clamp to the per-slot capacity: positions past max_len can
             # never be used, so padding beyond it would only waste compute
@@ -421,11 +463,12 @@ class Engine:
             toks = np.zeros((1, Sp), np.int32)
             toks[0, :S] = prompt
             logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(S - 1)
+                self.params, {"tokens": jnp.asarray(toks), **extras},
+                jnp.int32(S - 1),
             )
         else:
             logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(prompt)[None]}
+                self.params, {"tokens": jnp.asarray(prompt)[None], **extras}
             )
         self.kv.install_prefill(slot, caches)
         req.prefill_pos = req.prefill_target
@@ -440,16 +483,18 @@ class Engine:
             for slot, req in admitted:
                 self._prefill_full(slot, req)
             return
-        # chunk budget: oldest admission first (FIFO toward first token);
+        # token budget: oldest admission first (FIFO toward first token);
         # whatever is left after the budget waits for the next engine step,
         # with the decode batch stepping in between — a max-length prompt
-        # can no longer stall in-flight decodes for its whole prefill
-        budget = self.ec.prefill_chunks_per_step
+        # can no longer stall in-flight decodes for its whole prefill.
+        # Spending is page-granular (chunks are page-sized): a chunk may
+        # start while any budget remains, so a step overshoots by at most
+        # one chunk.
+        budget = self.tokens_per_step
         for slot, req in self.sched.prefilling:
-            while budget and req.prefilling:
-                self._prefill_one_chunk(slot, req)
-                budget -= 1
-            if not budget:
+            while budget > 0 and req.prefilling:
+                budget -= self._prefill_one_chunk(slot, req)
+            if budget <= 0:
                 break
 
     def _decode_once(self) -> None:
@@ -526,12 +571,18 @@ class Engine:
     def generate(self, batch: Dict, max_new_tokens: int = 32) -> np.ndarray:
         """Drop-in for Server.generate: all prompts arrive at step 0.
 
-        With ``eos_id`` set, requests that stop early are right-padded with
-        the eos token so the result stays rectangular.
+        Non-token batch entries with a leading batch axis (e.g. enc-dec
+        ``audio_embeds``) are split into per-request extras.  With
+        ``eos_id`` set, requests that stop early are right-padded with the
+        eos token so the result stays rectangular.
         """
         tokens = np.asarray(batch["tokens"])
         for b in range(tokens.shape[0]):
-            self.submit(tokens[b], max_new_tokens)
+            extras = {
+                k: np.asarray(v)[b : b + 1]
+                for k, v in batch.items() if k != "tokens"
+            }
+            self.submit(tokens[b], max_new_tokens, extras=extras or None)
         reqs = self.run()
         # always exactly max_new columns so downstream indexing never
         # changes shape between batches (Server can return fewer only when
@@ -542,22 +593,6 @@ class Engine:
             toks = r.out_tokens[:max_new_tokens]
             out[i, : len(toks)] = toks
         return out
-
-
-def frontend_extras(cfg: ModelConfig, batch: Dict, B: int, S: int) -> Dict:
-    """Stub modality inputs (zero embeddings) for vision/audio frontends."""
-    if cfg.frontend == "vision":
-        batch["vis_embeds"] = jnp.zeros(
-            (B, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype
-        )
-        batch["positions3"] = jnp.broadcast_to(
-            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
-        )
-    if cfg.frontend == "audio":
-        batch["audio_embeds"] = jnp.zeros(
-            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
-        )
-    return batch
 
 
 def run_static_waves(

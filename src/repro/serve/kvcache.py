@@ -14,9 +14,11 @@ handed to requests through:
   to physical pages, gathered back into logical order at attention time
   (:func:`repro.models.attention.gqa_paged_decode`).
 
-Cache families that already have O(1)-in-context layouts keep them behind
-the same slot interface: SWA rings and SSM states are per-slot rows, written
-at admission and advanced per-slot by the batched decode step.
+What a page of context *is* per layer family — K/V tensors, the MLA
+latent, an SWA ring row, an SSM state row, enc-dec cross rows — is the
+family's :class:`~repro.models.adapters.CacheAdapter`'s business; this
+module owns the pool geometry, the page accounting, and the donating
+install jit that walks the adapter registry.
 
 Host-side bookkeeping (free list, page tables, per-slot lengths) is numpy;
 device state is a pytree produced by :func:`repro.models.model.init_paged_cache`
@@ -34,80 +36,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import adapters as A
 from repro.models import model as M
 
 NULL_PAGE = 0  # reserved physical page: idle-slot writes, unmapped gathers
 
 
 # one jitted donating updater per model config: every slot write (paged
-# scatter, ring row, SSM state row) happens inside a single jit call whose
-# cache-pool argument is DONATED — the pool is updated in place instead of
-# being copied per admission (the eager host-side `.at[].set` path copied
-# the entire multi-layer pool for every request installed).  jax's own
-# per-shape executable cache makes repeat prompt shapes free; the engine
-# bounds the number of distinct shapes by bucketing (dense) or chunking.
+# scatter, ring row, SSM state row, cross rows) happens inside a single jit
+# call whose cache-pool argument is DONATED — the pool is updated in place
+# instead of being copied per admission (the eager host-side `.at[].set`
+# path copied the entire multi-layer pool for every request installed).
+# Which write each cache entry needs is the entry's adapter's business
+# (:mod:`repro.models.adapters`); this function only walks the registry.
+# Partial sources install only the keys they carry (e.g. the enc-dec
+# admission installs cross rows alone, before any prompt chunk runs) —
+# distinct source structures get their own jit entries, shapes stay bounded.
 @functools.lru_cache(maxsize=None)
 def _install_fn(cfg: ModelConfig):
     def install(data, src, slot, phys_tok, off_tok):
         out = {}
         for si, (kind, _n) in enumerate(M.layer_segments(cfg)):
             seg = f"seg{si}"
+            if seg not in src:
+                out[seg] = data[seg]  # untouched (partial install)
+                continue
             dst, new = data[seg], {}
-            if "attn" in dst:
-                if "k_pages" in dst["attn"]:
-                    new["attn"] = _install_paged_jit(
-                        dst["attn"], src[seg]["attn"], phys_tok, off_tok
+            for ad in A.adapters_for(cfg, kind):
+                if ad.key in src[seg]:
+                    new[ad.key] = ad.install(
+                        cfg, dst[ad.key], src[seg][ad.key], slot,
+                        phys_tok, off_tok,
                     )
                 else:
-                    new["attn"] = _install_ring_jit(
-                        dst["attn"], src[seg]["attn"], slot
-                    )
-            if "ssm" in dst:
-                new["ssm"] = {
-                    key: jax.lax.dynamic_update_slice_in_dim(
-                        dst["ssm"][key],
-                        src[seg]["ssm"][key].astype(dst["ssm"][key].dtype),
-                        slot, 1,
-                    )
-                    for key in ("state", "conv")
-                }
+                    new[ad.key] = dst[ad.key]
             out[seg] = new
         return out
 
     return jax.jit(install, donate_argnums=(0,))
-
-
-def _install_paged_jit(dst, src, phys_tok, off_tok):
-    """Scatter (L, S) prefill K/V per token into the physical page pool.
-
-    Tokens past the slot's allocation arrive mapped to the null page (the
-    bucketed-prefill pad tail), whose content is garbage by design.
-    """
-    out = dict(dst)
-    for name in ("k", "v"):
-        x = src[name][:, 0]  # (L, S, Hkv, dh)
-        out[f"{name}_pages"] = dst[f"{name}_pages"].at[:, phys_tok, off_tok].set(
-            x.astype(dst[f"{name}_pages"].dtype)
-        )
-    return out
-
-
-def _install_ring_jit(dst, src, slot):
-    """Write one request's SWA ring (k/v/pos) into its slot's rows."""
-    slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
-    got = src["k"].shape[2]  # prefill ring length: min(window, S)
-    assert got <= slots_e, (got, slots_e)
-    # token at absolute position p lives in ring slot p % slots_e; the
-    # prefill packing already satisfies this for got == window (== slots_e)
-    # and trivially for S < window (identity placement, see attention.py)
-    out = {}
-    for name, empty in (("k", 0.0), ("v", 0.0), ("pos", -1)):
-        L = dst[name].shape[0]
-        row_shape = (L, 1) + dst[name].shape[2:]
-        row = jnp.full(row_shape, empty, dst[name].dtype)
-        row = row.at[:, :, :got].set(src[name].astype(dst[name].dtype))
-        out[name] = jax.lax.dynamic_update_slice_in_dim(dst[name], row, slot, 1)
-    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,12 +129,9 @@ class PagedKVCache:
     """Device cache pool + host page tables for the continuous-batching engine."""
 
     def __init__(self, cfg: ModelConfig, pc: PagedCacheConfig):
-        if not M.supports_paged_decode(cfg):
-            raise NotImplementedError(
-                f"{cfg.name}: paged serving supports dense/GQA, SWA and SSM "
-                f"families (attn_type={cfg.attn_type!r}, "
-                f"frontend={cfg.frontend!r} not yet)"
-            )
+        msg = A.unsupported_message(cfg, hint="use Server for the rest")
+        if msg is not None:
+            raise NotImplementedError(msg)
         self.cfg = cfg
         self.page_size = pc.page_size or cfg.block
         self.max_seqs = pc.max_seqs
@@ -283,12 +246,23 @@ class PagedKVCache:
             self.data, prefill_caches, jnp.int32(slot), phys_tok, off_tok
         )
 
+    def install_partial(self, slot: int, src) -> None:
+        """Install a partial source (only the segments/keys it carries) into
+        a slot — e.g. the enc-dec admission's cross rows, written once
+        before any prompt chunk runs.  Same donating jit discipline as
+        :meth:`install_prefill`."""
+        phys_tok, off_tok = self.token_targets(slot, 0, 1)  # unused by rows
+        self.data = _install_fn(self.cfg)(
+            self.data, src, jnp.int32(slot), phys_tok, off_tok
+        )
+
     def _src_token_count(self, prefill_caches) -> int:
         """Token count of the (possibly padded) paged prefill source."""
         for si, (kind, _n) in enumerate(M.layer_segments(self.cfg)):
             seg = f"seg{si}"
-            if "attn" in self.data[seg] and "k_pages" in self.data[seg]["attn"]:
-                return int(prefill_caches[seg]["attn"]["k"].shape[2])
+            for ad in A.adapters_for(self.cfg, kind):
+                if ad.paged and ad.key in prefill_caches.get(seg, {}):
+                    return ad.src_tokens(prefill_caches[seg][ad.key])
         return 1  # no paged segment (SWA/SSM): targets unused
 
     # -- chunk write targets -------------------------------------------------

@@ -71,6 +71,10 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
     arrival_step: int = 0
+    # per-request modality inputs beyond the token prompt (e.g. enc-dec
+    # audio_embeds).  Kept on the request so preemption-with-recompute can
+    # re-run the admission-time installs (encoder pass) on re-admission.
+    extras: Optional[Dict] = None
     state: str = "pending"  # pending | waiting | running | finished
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     # tokens generated on-device but not yet copied to out_tokens: the

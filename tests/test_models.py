@@ -32,19 +32,13 @@ def _batch(cfg, B=2, S=32, key=1):
     return batch
 
 
-# The grad-graph compile for the heaviest archs dominates tier-1 wall
-# time even at smoke shapes, so their train-step smokes live behind -m slow;
-# their prefill/decode smokes (and every other arch's train step) stay in
-# the default selection.  whisper-tiny came back into tier-1 once the jit
-# caches warmed by the other encdec paths brought its train smoke to ~8 s;
-# the MoE/MTP archs (capacity-dispatch grad graphs) are still 10 s+ each.
-_COMPILE_HEAVY = {
-    "deepseek-v3-671b", "qwen2-vl-72b", "granite-moe-3b-a800m",
-}
-ARCH_TRAIN_PARAMS = [
-    pytest.param(a, marks=pytest.mark.slow) if a in _COMPILE_HEAVY else a
-    for a in C.arch_ids()
-]
+# Every arch's train smoke runs in tier-1.  The MoE/MTP archs
+# (deepseek-v3, granite-moe: capacity-dispatch grad graphs; qwen2-vl:
+# M-RoPE + vision prefix) used to live behind -m slow for compile time —
+# promoted back once CI grew a persistent JAX compilation cache (warm runs
+# skip the compile; cold costs measured 2026-07: deepseek ~32 s, qwen2-vl
+# ~13 s, granite ~11 s).
+ARCH_TRAIN_PARAMS = list(C.arch_ids())
 
 
 @pytest.mark.parametrize("arch", ARCH_TRAIN_PARAMS)
