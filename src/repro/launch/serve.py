@@ -91,6 +91,7 @@ def run_workload(cfg, params, args):
             prefill_chunk=args.prefill_chunk,
             prefill_tokens_per_step=args.prefill_tokens_per_step,
             prefill_chunks_per_step=args.prefill_chunks_per_step,
+            prefix_sharing=not args.no_prefix_sharing,
         ))
         for r in reqs:
             eng.submit(r["prompt"], r["max_new_tokens"],
@@ -106,15 +107,31 @@ def run_workload(cfg, params, args):
               f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile); "
               f"page={eng.kv.page_size} pool={eng.kv.allocator.num_pages} "
               f"cache={eng.kv.cache_bytes() / 1e6:.2f} MB, {mode}")
-        print("  rid arrive admit queue ttft_ms preempt  tok/s  n_tok")
+        print("  rid arrive admit queue ttft_ms preempt cached  tok/s  n_tok")
         for r in done:
             s = r.stats
             print(f"  {r.rid:3d} {s.arrival_step:6d} {s.admitted_step:5d} "
                   f"{s.queue_steps:5d} {s.ttft_s * 1e3:7.1f} "
-                  f"{s.n_preemptions:7d} {s.decode_tok_s(len(r.out_tokens)):6.1f} "
+                  f"{s.n_preemptions:7d} {s.cached_prompt_tokens:6d} "
+                  f"{s.decode_tok_s(len(r.out_tokens)):6.1f} "
                   f"{len(r.out_tokens):6d}")
         print(f"  engine steps={eng.step_count} decode_steps={eng.decode_steps} "
-              f"prefill_tokens={eng.prefill_tokens}")
+              f"prefill_tokens={eng.prefill_tokens} "
+              f"prefill_chunks={eng.prefill_chunks}")
+        prompt_toks = sum(r.prompt_len for r in done)
+        cached = sum(r.stats.cached_prompt_tokens for r in done)
+        if eng.kv.sharing:
+            mode = ("compute-skipping" if eng.kv.skip_prefill
+                    else "memory-dedup, recompute")
+            print(f"  prefix cache [{mode}]: {cached}/{prompt_toks} prompt "
+                  f"tokens served from cache "
+                  f"({100.0 * cached / max(prompt_toks, 1):.1f}% hit rate), "
+                  f"{eng.kv.pages_aliased} page aliases, "
+                  f"{eng.kv.cow_copies} COW copies, "
+                  f"{eng.kv.prefix_cache_pages} pages resident")
+        else:
+            print("  prefix cache: off (family not shareable or "
+                  "--no-prefix-sharing)")
 
 
 def main():
@@ -146,14 +163,25 @@ def main():
                          "decode batch steps (page-granular; the "
                          "latency/throughput knob).  0 derives from the "
                          "deprecated --prefill-chunks-per-step alias")
-    ap.add_argument("--prefill-chunks-per-step", type=int, default=4,
+    ap.add_argument("--prefill-chunks-per-step", type=int, default=None,
                     help="DEPRECATED alias: admission budget as a chunk "
-                         "count (use --prefill-tokens-per-step)")
+                         "count (use --prefill-tokens-per-step; setting "
+                         "this emits a one-shot DeprecationWarning)")
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="one-shot prefill per admission (the pre-chunking "
                          "behavior; still installed via donating jit)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the shared-prefix page cache (radix "
+                         "index + refcounted aliasing + copy-on-write); "
+                         "stateful families disable it automatically")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.prefill_chunks_per_step is not None:
+        # one-shot per process; the Engine would also warn, but the flag
+        # deserves the notice even on paths that never build an Engine
+        from repro.serve.engine import warn_prefill_chunks_deprecated
+        warn_prefill_chunks_deprecated()
 
     cfg = C.get_config(args.arch, smoke=args.smoke,
                        dtype=jnp.float32 if args.smoke else jnp.bfloat16)

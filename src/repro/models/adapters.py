@@ -123,6 +123,23 @@ class CacheAdapter:
     param_key: str = ""
     family: str = ""  # human name the registry reports
     paged: bool = False
+    # prefix sharing capability: a shareable adapter's cache entries are
+    # position-indexed pages whose content is a pure function of the token
+    # prefix, so physical pages may be aliased across requests (PagedAttn,
+    # LatentMLA).  Slot-local rows (SWA rings, SSM states) and per-request
+    # side-input caches (enc-dec cross rows) declare False.
+    shareable: bool = False
+    # True when the family's cache content depends on per-request inputs
+    # beyond the token ids (enc-dec audio): the whole stack's hidden states
+    # are then request-specific and token-keyed page aliasing is unsound
+    # for EVERY co-resident adapter, not just this one.
+    side_inputs: bool = False
+
+    def copy_page(self, cfg: ModelConfig, seg_cache: Dict, src, dst) -> Dict:
+        """Copy physical page ``src`` -> ``dst`` in this adapter's pools
+        (the COW step; traced inside the engine's donating copy jit).
+        Only meaningful for paged adapters."""
+        raise NotImplementedError
 
     def chunk_multiple(self, cfg: ModelConfig) -> int:
         """Prefill chunk boundaries must sit on multiples of this."""
@@ -164,9 +181,13 @@ class PagedAttnAdapter(CacheAdapter):
     param_key = "attn"
     family = "dense/GQA (paged K/V)"
     paged = True
+    shareable = True
 
     def init_pool(self, cfg, geom):
         return attn.paged_cache_init(cfg, geom.num_pages, geom.page_size)
+
+    def copy_page(self, cfg, seg_cache, src, dst):
+        return attn.paged_copy_page(seg_cache, src, dst)
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return _install_paged(dst, src, phys_tok, off_tok,
@@ -248,9 +269,13 @@ class LatentMLAAdapter(CacheAdapter):
     param_key = "attn"
     family = "MLA (latent pages)"
     paged = True
+    shareable = True
 
     def init_pool(self, cfg, geom):
         return attn.mla_paged_cache_init(cfg, geom.num_pages, geom.page_size)
+
+    def copy_page(self, cfg, seg_cache, src, dst):
+        return attn.paged_copy_page(seg_cache, src, dst)
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return _install_paged(dst, src, phys_tok, off_tok,
@@ -329,6 +354,7 @@ class CrossAttnAdapter(CacheAdapter):
     param_key = "cross"
     family = "enc-dec (cross rows + paged self-attn)"
     installs_at_admission = True
+    side_inputs = True  # cache content depends on the request's audio
 
     def init_pool(self, cfg, geom):
         dh = cfg.d_head
@@ -420,6 +446,41 @@ def admission_adapters(cfg: ModelConfig) -> List[CacheAdapter]:
         ad for ad in all_adapters(cfg)
         if getattr(ad, "installs_at_admission", False)
     ]
+
+
+def prefix_shareable(cfg: ModelConfig) -> bool:
+    """Whether this config's physical pages may be ALIASED across requests
+    with a matching token prefix (memory dedup + COW on divergence).
+
+    Requires at least one shareable paged adapter (something to alias) and
+    no side-input family in the stack: enc-dec hidden states depend on the
+    request's audio, so token-keyed aliasing is unsound for every layer of
+    that stack.  Non-shareable slot-local adapters (rings, SSM states) do
+    NOT block aliasing of their paged co-residents — they only block
+    compute skipping (see :func:`prefix_compute_skippable`).
+    """
+    ads = all_adapters(cfg)
+    return (any(ad.shareable for ad in ads)
+            and not any(ad.side_inputs for ad in ads))
+
+
+def prefix_compute_skippable(cfg: ModelConfig) -> bool:
+    """Whether a cached prefix lets admission SKIP the prefix's prefill
+    chunks entirely (start chunking at the first uncached page boundary).
+
+    Stricter than :func:`prefix_shareable`: every adapter must be
+    shareable (a ring/SSM row is a slot-local summary of the whole
+    sequence, so those families must still run every prompt token even
+    when the attention pages are aliased), and MoE segments must be absent
+    (capacity dispatch groups tokens per forward call, so a suffix-only
+    chunk would regroup the dispatch — the documented multi-chunk MoE
+    caveat; MoE stacks alias pages for the memory win and recompute).
+    """
+    if not prefix_shareable(cfg):
+        return False
+    if any(kind == "moe" for kind, _n in layer_segments(cfg)):
+        return False
+    return all(ad.shareable for ad in all_adapters(cfg))
 
 
 def prefill_chunk_multiple(cfg: ModelConfig) -> int:

@@ -210,6 +210,25 @@ def gqa_paged_decode(
     return dense(cfg, out, p["wo"]), {"k_pages": k_pages, "v_pages": v_pages}
 
 
+def paged_copy_page(cache: Dict, src, dst) -> Dict:
+    """Copy one physical page (``src`` -> ``dst``) in every page pool.
+
+    The copy-on-write step for shared-prefix serving: when a slot must write
+    into a page whose refcount is > 1 (aliased by other requests or pinned
+    by the prefix index), the host allocates a fresh page, this copy runs
+    inside a donating jit, and the slot's page-table entry is swapped to the
+    private copy.  Page ids are traced scalars, so every COW event shares
+    one compiled shape.  Works on any pool whose leaves are
+    ``(L, num_pages, page, ...)`` — dense/GQA K/V pages and MLA latent pages
+    alike (the page axis is axis 1 after the layer stack).
+    """
+    out = {}
+    for name, pool in cache.items():
+        row = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+        out[name] = jax.lax.dynamic_update_slice_in_dim(pool, row, dst, axis=1)
+    return out
+
+
 def gqa_paged_prefill_chunk(
     p: Dict,
     cfg: ModelConfig,

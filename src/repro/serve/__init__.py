@@ -8,8 +8,18 @@ from repro.serve.engine import (
     make_requests,
     run_static_waves,
 )
-from repro.models.adapters import supported_families, unsupported_reason
-from repro.serve.kvcache import PageAllocator, PagedCacheConfig, PagedKVCache
+from repro.models.adapters import (
+    prefix_compute_skippable,
+    prefix_shareable,
+    supported_families,
+    unsupported_reason,
+)
+from repro.serve.kvcache import (
+    PageAllocator,
+    PagedCacheConfig,
+    PagedKVCache,
+    PrefixIndex,
+)
 from repro.serve.scheduler import Request, RequestStats, Scheduler
 
 __all__ = [
@@ -18,6 +28,7 @@ __all__ = [
     "PageAllocator",
     "PagedCacheConfig",
     "PagedKVCache",
+    "PrefixIndex",
     "Request",
     "RequestStats",
     "Scheduler",
@@ -26,6 +37,8 @@ __all__ = [
     "bucket_tokens",
     "frontend_extras",
     "make_requests",
+    "prefix_compute_skippable",
+    "prefix_shareable",
     "run_static_waves",
     "supported_families",
     "unsupported_reason",

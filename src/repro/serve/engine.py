@@ -22,12 +22,22 @@ reuses one full-chunk shape plus a small set of final-chunk shapes
 (power-of-two buckets for dense/GQA; exact lengths — capped by the chunk
 size — where semantics require it: SWA ring packing, SSM final states).
 
+**Shared-prefix paged KV**: physical pages are reference-counted, and a
+radix prefix index over page-aligned token prefixes lets an admission
+*alias* the pages of a prompt's longest cached prefix — chunked prefill
+then starts mid-prompt at the first uncached page boundary, and a decode
+write into a still-shared page copies-on-write (:mod:`repro.serve.kvcache`).
+Shared system prompts are the common case in production traffic: the
+redundant prefill they used to cost is exactly the avoidable off-chip
+traffic the paper's arrangement thesis targets.
+
 Cache families are the registry's business (:mod:`repro.models.adapters`):
 one :class:`~repro.models.adapters.CacheAdapter` per layer family owns its
-pool shapes, chunk scatter, decode gather and active-mask semantics —
-dense/GQA K/V pages, MLA latent pages, SWA rings, SSM state rows, enc-dec
-cross rows (installed once at admission).  The engine drives adapters
-generically; only the vision frontend still requires :class:`Server`.
+pool shapes, chunk scatter, decode gather, active-mask semantics and
+prefix-shareability — dense/GQA K/V pages, MLA latent pages, SWA rings,
+SSM state rows, enc-dec cross rows (installed once at admission).  The
+engine drives adapters generically; only the vision frontend still
+requires :class:`Server`.
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -232,10 +243,18 @@ class EngineConfig:
     chunk is the execution quantum, and chunks are page-sized), so the
     effective budget rounds up to whole chunks.  ``0`` derives it from the
     DEPRECATED chunk-count alias ``prefill_chunks_per_step`` (budget =
-    chunks x chunk size), kept so existing callers keep their behavior.
+    chunks x chunk size); setting the alias explicitly emits a one-shot
+    ``DeprecationWarning`` (leave it None for the default of 4 chunks).
 
     ``chunked_prefill=False`` falls back to one-shot prefill per admission
     (still installed through the jitted donating updater).
+
+    ``prefix_sharing`` lets requests with a common page-aligned token
+    prefix alias the same physical pages (radix prefix index + refcounts +
+    copy-on-write divergence).  Only effective for families whose pages
+    the adapter registry declares shareable (dense/GQA, MLA); stateful
+    families (SWA rings, SSM rows, enc-dec) fall through to the unshared
+    path, and MoE stacks alias pages but recompute every token.
     """
 
     max_seqs: int = 4
@@ -245,10 +264,33 @@ class EngineConfig:
     chunked_prefill: bool = True
     prefill_chunk: int = 0
     prefill_tokens_per_step: int = 0  # 0: derive from the deprecated alias
-    prefill_chunks_per_step: int = 4  # DEPRECATED: chunk-count alias
+    prefill_chunks_per_step: Optional[int] = None  # DEPRECATED alias
+    prefix_sharing: bool = True
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
+
+
+_DEFAULT_CHUNKS_PER_STEP = 4  # the alias's historical default
+
+_chunks_alias_warned = False
+
+
+def warn_prefill_chunks_deprecated() -> None:
+    """One-shot DeprecationWarning for the ``prefill_chunks_per_step``
+    chunk-count alias (per process; the launch driver and EngineConfig
+    consumers both funnel through here)."""
+    global _chunks_alias_warned
+    if _chunks_alias_warned:
+        return
+    _chunks_alias_warned = True
+    warnings.warn(
+        "prefill_chunks_per_step is deprecated: the admission budget is "
+        "token-level now — set prefill_tokens_per_step (the chunk-count "
+        "alias still maps to chunks x chunk size, but will be removed)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 class Engine:
@@ -258,22 +300,34 @@ class Engine:
         self.cfg, self.params, self.ec, self.mesh = cfg, params, ec, mesh
         # unsupported families are refused by the PagedKVCache constructor
         # (before any pool is allocated), with the registry's family list
+        # recompute families (MoE stacks) rely on prefix chunks replaying
+        # the publisher's exact chunk grid for bit-identical page content;
+        # one-shot prefill groups the whole prompt per request, so sharing
+        # is only sound there for compute-skippable families
+        sharing = ec.prefix_sharing and (
+            ec.chunked_prefill or A.prefix_compute_skippable(cfg)
+        )
         self.kv = PagedKVCache(cfg, PagedCacheConfig(
             max_seqs=ec.max_seqs, max_len=ec.max_len,
             page_size=ec.page_size, num_pages=ec.num_pages,
+            prefix_sharing=sharing,
         ))
         self.sched = Scheduler(self.kv, ec.max_seqs)
         self.chunk_size = self._resolve_chunk(ec.prefill_chunk)
         if ec.prefill_tokens_per_step < 0:
             raise ValueError("prefill_tokens_per_step must be >= 0")
-        if ec.prefill_tokens_per_step == 0 and ec.prefill_chunks_per_step < 1:
+        chunks_alias = ec.prefill_chunks_per_step
+        if chunks_alias is None:
+            chunks_alias = _DEFAULT_CHUNKS_PER_STEP
+        else:
+            warn_prefill_chunks_deprecated()
+        if ec.prefill_tokens_per_step == 0 and chunks_alias < 1:
             # the deprecated alias is only validated when it is actually used
             raise ValueError("prefill_chunks_per_step must be >= 1")
         # token-level admission budget; the deprecated chunk-count knob
         # aliases to (chunks x chunk size) when no token budget is given
         self.tokens_per_step = (
-            ec.prefill_tokens_per_step
-            or ec.prefill_chunks_per_step * self.chunk_size
+            ec.prefill_tokens_per_step or chunks_alias * self.chunk_size
         )
         # adapters installing request-level context once at admission
         # (enc-dec encoder K/V) — resolved from the registry, not by family
@@ -305,6 +359,7 @@ class Engine:
         self.step_count = 0
         self.decode_steps = 0
         self.prefill_tokens = 0
+        self.prefill_chunks = 0  # chunk steps actually run (sharing skips)
 
     # -- request intake -----------------------------------------------------
 
@@ -430,8 +485,6 @@ class Engine:
         """
         prompt = req.effective_prompt
         off = req.prefill_pos
-        if off == 0:
-            self._install_admission_context(slot, req)
         n = min(self.chunk_size, len(prompt) - off)
         # full chunks share ONE jit shape; the final ragged chunk draws from
         # the small bucketed/exact shape set (bounded by the chunk size)
@@ -446,6 +499,10 @@ class Engine:
         )
         req.prefill_pos += n
         self.prefill_tokens += n
+        self.prefill_chunks += 1
+        # publish newly completed full pages: from here on, prompts sharing
+        # this prefix alias these pages instead of recomputing them
+        self.kv.commit_prefix(slot, prompt, req.prefill_pos)
         if not req.prefilling:  # final chunk: sample the first token
             self._append_token(slot, req, self._sample(logits[0, -1], req))
         return n
@@ -473,6 +530,7 @@ class Engine:
         self.kv.install_prefill(slot, caches)
         req.prefill_pos = req.prefill_target
         self.prefill_tokens += S
+        self.kv.commit_prefix(slot, prompt, S)
         self._append_token(slot, req, self._sample(logits[0, -1], req))
 
     # -- engine steps -------------------------------------------------------
@@ -483,6 +541,11 @@ class Engine:
             for slot, req in admitted:
                 self._prefill_full(slot, req)
             return
+        # request-level admission context (enc-dec encoder K/V) installs at
+        # admission, not on the first chunk: a shared-prefix admission may
+        # resume its chunking mid-prompt and never see offset 0
+        for slot, req in admitted:
+            self._install_admission_context(slot, req)
         # token budget: oldest admission first (FIFO toward first token);
         # whatever is left after the budget waits for the next engine step,
         # with the decode batch stepping in between — a max-length prompt
@@ -499,9 +562,12 @@ class Engine:
 
     def _decode_once(self) -> None:
         decoding = self.sched.decoding
-        if decoding and sum(
+        deficit = sum(
             self.kv.growth_deficit(slot, req.next_pos) for slot, req in decoding
-        ) > self.kv.num_free_pages:
+        ) if decoding else 0
+        # available_pages walks the prefix tree — consult it only when the
+        # free list alone cannot cover the round's growth
+        if deficit > self.kv.num_free_pages and deficit > self.kv.available_pages:
             # the growth round below may preempt: victims must carry their
             # full token history back to the queue, so sync first
             self._flush_pending()

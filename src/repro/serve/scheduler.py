@@ -49,6 +49,10 @@ class RequestStats:
     t_first_token: float = 0.0
     t_finish: float = 0.0
     n_preemptions: int = 0
+    # prompt tokens served from the shared prefix cache at the latest
+    # admission (page-aliased instead of recomputed-and-stored); feeds the
+    # launch driver's per-run prefix hit-rate line
+    cached_prompt_tokens: int = 0
 
     @property
     def queue_steps(self) -> int:
@@ -178,17 +182,28 @@ class Scheduler:
             if not free:
                 break
             req = self.queue[0]
-            if not self.kv.can_admit(len(req.effective_prompt)):
+            if not self.kv.can_admit(req.effective_prompt):
                 break  # head-of-line blocks: preserves FIFO fairness
             self.queue.popleft()
             slot = free[0]
-            ok = self.kv.admit(slot, len(req.effective_prompt))
-            assert ok, "can_admit passed but admit failed"
+            matched = self.kv.admit(slot, req.effective_prompt)
+            assert matched is not None, "can_admit passed but admit failed"
             self.slots[slot] = req
             self._admit_order.append(slot)
             req.state = "running"
-            req.prefill_pos = 0
             req.prefill_target = len(req.effective_prompt)
+            # shared-prefix admission: when the family supports compute
+            # skipping, prefill resumes at the first uncached page boundary
+            # (capped one short of the whole prompt — the final chunk must
+            # still run to produce the first token's logits; its write is
+            # null-routed by the cache when the position is aliased).
+            # Memory-dedup-only families (MoE stacks) alias pages but
+            # recompute every token, so they restart at 0.
+            req.prefill_pos = (
+                min(matched, req.prefill_target - 1)
+                if self.kv.skip_prefill else 0
+            )
+            req.stats.cached_prompt_tokens = matched
             now = time.perf_counter()
             if req.stats.admitted_step < 0:
                 req.stats.admitted_step = step
@@ -199,16 +214,23 @@ class Scheduler:
     # -- growth / preemption ------------------------------------------------
 
     def grow_for_decode(self, step: int) -> List[Request]:
-        """Ensure every decoding slot can write its next token; preempt LIFO
-        on OOM.  Returns the requests preempted this step.  Mid-prefill
-        slots need no growth (admission reserved their prompt + one decode
-        page) but remain preemption victims like any other slot."""
+        """Ensure every decoding slot can write its next token *privately*;
+        preempt LIFO on OOM.  Returns the requests preempted this step.
+        Private means mapped AND exclusively owned: a target page shared
+        with the prefix index or another slot copies-on-write here
+        (:meth:`PagedKVCache.prepare_decode_write`), and a COW allocation
+        failure preempts exactly like a growth failure.  Mid-prefill slots
+        need no growth (admission reserved their prompt + one decode page)
+        but remain preemption victims like any other slot."""
         preempted: List[Request] = []
         for slot in list(self._admit_order):  # oldest first get pages first
             req = self.slots[slot]
             if req is None or req.prefilling:
                 continue
-            while not self.kv.ensure_capacity(slot, req.next_pos):
+            while not (
+                self.kv.ensure_capacity(slot, req.next_pos)
+                and self.kv.prepare_decode_write(slot, req.next_pos)
+            ):
                 victim_slot = self._admit_order[-1]  # youngest
                 victim = self.preempt(victim_slot, step)
                 preempted.append(victim)
@@ -223,7 +245,10 @@ class Scheduler:
         self.slots[slot] = None
         self._admit_order.remove(slot)
         req.state = "waiting"
-        req.prefill_pos = 0  # re-admission re-prefills (recompute discipline)
+        # re-admission re-prefills (recompute discipline) — though pages the
+        # preempted prefill already published to the prefix index let the
+        # next admission resume at the first uncached page boundary
+        req.prefill_pos = 0
         req.stats.n_preemptions += 1
         self.queue.appendleft(req)  # preempted requests resume first
         return req

@@ -34,27 +34,51 @@ from repro.serve import (
 # Page allocator / cache manager units
 # --------------------------------------------------------------------------
 
-def test_page_allocator_alloc_free_cycle():
+def test_page_allocator_refcount_cycle():
     a = PageAllocator(8)  # 7 usable pages (page 0 reserved)
     assert a.num_free == 7
     got = a.alloc(3)
     assert len(got) == 3 and a.num_free == 4
     assert 0 not in got  # null page never handed out
+    assert all(a.refcount(p) == 1 for p in got)
     assert a.alloc(5) is None  # short pool: no partial allocation
     assert a.num_free == 4  # failed alloc left the pool untouched
-    a.free(got)
+    # aliasing: a second reference keeps the page out of the free list
+    a.ref(got[:1])
+    assert a.refcount(got[0]) == 2
+    assert a.unref(got) == got[1:]  # first page survives its extra ref
+    assert a.num_free == 6
+    assert a.unref(got[:1]) == got[:1]  # last reference drops -> freed
     assert a.num_free == 7
     with pytest.raises(ValueError):
-        a.free([0])  # null page is not freeable
-    got2 = a.alloc(1)
-    a.free(got2)
+        a.unref([0])  # null page is never tracked
     with pytest.raises(ValueError):
-        a.free(got2)  # double free
+        a.ref([got[0]])  # cannot alias a free page
+    got2 = a.alloc(1)
+    a.unref(got2)
+    with pytest.raises(ValueError):
+        a.unref(got2)  # double free
 
 
 def _paged_cfg(**over):
     cfg = C.get_config("minicpm-2b", smoke=True, dtype=jnp.float32)
     return dataclasses.replace(cfg, **over)
+
+
+def _idle_pages(kv):
+    """Pages owned by no request: the free list plus the prefix cache.
+
+    A drained engine must account for every page — with sharing on,
+    finished prompts deliberately leave their full pages pinned in the
+    prefix index (one index-owned reference each), so 'no leaks' means
+    free + index-pinned == total and no slot holds references."""
+    assert not kv._pages, f"slots still hold pages: {kv._pages}"
+    if kv.index is not None:
+        for node in kv.index._walk():
+            assert kv.allocator.refcount(node.page) == 1, (
+                f"index page {node.page} has stray references"
+            )
+    return kv.num_free_pages + kv.prefix_cache_pages
 
 
 def test_kvcache_page_size_derived_from_kernel_block():
@@ -72,10 +96,10 @@ def test_kvcache_admission_accounting():
     kv = PagedKVCache(cfg, PagedCacheConfig(max_seqs=2, max_len=16, num_pages=6))
     assert kv.pages_for(1) == 1 and kv.pages_for(4) == 1 and kv.pages_for(5) == 2
     assert kv.can_admit(10)  # needs ceil(11/4) = 3 <= 5
-    assert kv.admit(0, 10)
+    assert kv.admit(0, 10) is not None
     assert kv.num_free_pages == 2
     assert not kv.can_admit(10)  # 3 > 2 remaining
-    assert not kv.admit(1, 10)  # OOM admission refused, pool untouched
+    assert kv.admit(1, 10) is None  # OOM admission refused, pool untouched
     assert kv.num_free_pages == 2
     # growth: slot 0 already maps positions 0..11; position 12 needs page 4
     assert kv.ensure_capacity(0, 11)
@@ -174,7 +198,7 @@ def test_continuous_batching_matches_single_request(arch):
     for r, b in zip(reqs, base):
         np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
     # the third request re-filled a slot vacated by an earlier one
-    assert eng.kv.num_free_pages == eng.kv.allocator.num_pages - 1
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
 
 
 def test_preemption_recompute_preserves_outputs():
@@ -197,7 +221,7 @@ def test_preemption_recompute_preserves_outputs():
     assert sum(r.stats.n_preemptions for r in reqs) >= 1
     for r, b in zip(reqs, base):
         np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
-    assert eng.kv.num_free_pages == 8  # every page returned
+    assert _idle_pages(eng.kv) == 8  # every page accounted for
 
 
 def test_oom_admission_queues_until_pages_free():
@@ -320,7 +344,7 @@ def test_engine_reuse_and_duplicate_rids():
     assert out1.shape == (2, 5) and out2.shape == (3, 5)
     assert sorted(eng.sched.finished) == [0, 1, 2, 3, 4]
     # every page returned after both batches (reuse leaks nothing)
-    assert eng.kv.num_free_pages == eng.kv.allocator.num_pages - 1
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
     with pytest.raises(ValueError):
         eng.submit(b1[0], 4, rid=0)  # rid 0 already finished
 
@@ -409,7 +433,7 @@ def test_mid_prefill_preemption_and_resume():
     assert b.stats.n_preemptions >= 1 and b.prefill_pos == b.prefill_target
     np.testing.assert_array_equal(np.asarray(a.out_tokens), base[0])
     np.testing.assert_array_equal(np.asarray(b.out_tokens), base[1])
-    assert eng.kv.num_free_pages == 8
+    assert _idle_pages(eng.kv) == 8
 
 
 def test_long_prompt_admission_does_not_stall_decode():
@@ -589,7 +613,7 @@ def test_mla_latent_pages_match_single_request(chunked):
     assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
     for r, b in zip(reqs, base):
         np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
-    assert eng.kv.num_free_pages == eng.kv.allocator.num_pages - 1
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
     # the latent pool really is the latent: rank + rope dims, not K/V heads
     pool = eng.kv.data["seg0"]["attn"]
     assert set(pool) == {"ckv_pages", "krope_pages"}
@@ -614,7 +638,7 @@ def test_mla_preemption_recompute_preserves_outputs():
     assert sum(r.stats.n_preemptions for r in reqs) >= 1
     for r, b in zip(reqs, base):
         np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
-    assert eng.kv.num_free_pages == 8
+    assert _idle_pages(eng.kv) == 8
 
 
 def test_deepseek_v3_engine_parity_single_chunk():
@@ -689,7 +713,7 @@ def test_encdec_engine_matches_single_request(chunked):
     assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
     for r, b in zip(reqs, base):
         np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
-    assert eng.kv.num_free_pages == eng.kv.allocator.num_pages - 1
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
 
 
 def test_encdec_mid_prefill_preemption_and_resume():
@@ -723,7 +747,7 @@ def test_encdec_mid_prefill_preemption_and_resume():
     assert b.stats.n_preemptions >= 1
     np.testing.assert_array_equal(np.asarray(a.out_tokens), base[0])
     np.testing.assert_array_equal(np.asarray(b.out_tokens), base[1])
-    assert eng.kv.num_free_pages == 8
+    assert _idle_pages(eng.kv) == 8
 
 
 # --------------------------------------------------------------------------
@@ -757,6 +781,392 @@ def test_prefill_token_budget_paces_admission():
     assert eng.tokens_per_step == eng.chunk_size == 8 and span == 3
     eng, span = admit_span()  # defaults: 4 chunks x 8 tokens
     assert eng.tokens_per_step == 32 and span == 0
+
+
+# --------------------------------------------------------------------------
+# Shared-prefix paged KV: refcounted pages, radix prefix index, COW
+# --------------------------------------------------------------------------
+
+def test_prefix_index_radix_unit():
+    """PrefixIndex unit: page-aligned lookup, full-tail partial match,
+    insert dedup, leaf-first LRU eviction, reclaimable accounting."""
+    from repro.serve import PrefixIndex
+
+    a = PageAllocator(10)
+    idx = PrefixIndex(2, a)  # 2-token pages
+    pages = a.alloc(3)
+    toks = np.array([1, 2, 3, 4, 5], np.int32)
+    idx.insert(toks, pages, 4)  # two full pages; token 5 is a partial tail
+    assert idx.num_pages == 2
+    assert a.refcount(pages[0]) == 2 and a.refcount(pages[1]) == 2
+    assert a.refcount(pages[2]) == 1  # partial page never enters the index
+    # full-page walk
+    assert idx.lookup(np.array([1, 2, 3, 4])) == ([pages[0], pages[1]], 4)
+    # the tail [3] matches the first token of the cached (3, 4) page: the
+    # partially-consumed page is aliased too and the match covers the
+    # whole prompt (the COW-on-divergence setup)
+    assert idx.lookup(np.array([1, 2, 3])) == ([pages[0], pages[1]], 3)
+    # a mid-prompt mismatch stops the walk at the page boundary
+    assert idx.lookup(np.array([1, 2, 9, 4])) == ([pages[0]], 2)
+    assert idx.lookup(np.array([9, 9])) == ([], 0)
+    # re-insert dedups: the first publisher's pages win
+    dup = a.alloc(2)
+    idx.insert(toks, dup, 4)
+    assert idx.num_pages == 2 and a.refcount(dup[0]) == 1
+    a.unref(dup)
+
+    # second branch, inserted after the (3, 4) leaf's last touch; then
+    # touch the (1, 2) root so recency orders (3,4) < (7,8) < (1,2)
+    br = a.alloc(1)
+    idx.insert(np.array([7, 8]), br, 2)
+    idx.lookup(np.array([1, 2]))
+    a.unref(pages)  # drop the slot's references; the index keeps its own
+    a.unref(br)
+    assert a.refcount(pages[0]) == 1
+    # an excluded page (about to be aliased by an admission) is not
+    # reclaimable, and shields its ancestors too
+    assert idx.reclaimable_count(exclude=[pages[1]]) == 1  # only (7, 8)
+    assert idx.reclaimable_count() == 3
+    # LRU, leaf-first: coldest leaf (3, 4) goes first, then (7, 8); the
+    # (1, 2) root page goes only once its child is gone
+    assert idx.evict_lru() == pages[1]
+    assert idx.evict_lru() == br[0]
+    assert idx.evict_lru() == pages[0]
+    assert idx.evict_lru() is None and idx.num_pages == 0
+    assert a.num_free == 9
+
+
+def test_kvcache_admission_aliases_cached_prefix():
+    """kv-level: admit -> commit -> release leaves the prefix cached; the
+    next admission aliases it (refcount 2) and LRU eviction reclaims only
+    when the free list is exhausted."""
+    cfg = _paged_cfg(block=4)
+    kv = PagedKVCache(cfg, PagedCacheConfig(max_seqs=2, max_len=16, num_pages=6))
+    assert kv.sharing and kv.skip_prefill
+    A = np.arange(8, dtype=np.int32)
+    assert kv.admit(0, A) == 0  # cold
+    pages_a = list(kv._pages[0])
+    kv.commit_prefix(0, A, 8)
+    assert kv.prefix_cache_pages == 2
+    kv.release(0)
+    assert kv.num_free_pages == 3 and kv.prefix_cache_pages == 2
+    # same prompt: both full pages alias (refcount 2 = slot + index)
+    assert kv.admit(1, A) == 8
+    assert kv._pages[1][:2] == pages_a[:2]
+    assert kv.allocator.refcount(pages_a[0]) == 2
+    kv.release(1)
+    # a distinct prompt needing more than the free list evicts LRU
+    B = np.arange(100, 112, dtype=np.int32)
+    assert kv.can_admit(B)  # 4 pages: 3 free + evictable prefix
+    assert kv.admit(0, B) == 0
+    assert kv.prefix_cache_pages == 1  # deepest page evicted, root kept
+    kv.release(0)
+    # the surviving page still serves lookups up to its boundary
+    assert kv.admit(1, A) == 4
+    kv.release(1)
+
+
+@pytest.mark.parametrize("mla", [False, True])
+def test_shared_prefix_outputs_bit_identical(mla):
+    """The tentpole guarantee: prefix sharing is a *data-placement* change,
+    not a numerics change.  Requests aliasing a cached prefix — including a
+    partially-consumed tail page whose first decode write diverges through
+    COW — produce greedy outputs bit-identical to both the non-shared
+    engine and single-request generate(), for dense/GQA and MLA latent
+    pages."""
+    cfg = _mla_dense_cfg() if mla else _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+    pa = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=(3,))
+                         ]).astype(np.int32)
+    pb = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=(5,))
+                         ]).astype(np.int32)
+    pc = shared[:20].copy()  # prefix incl. a partial page -> COW divergence
+    prompts = [pa, pb, pc]
+    max_new = 8
+    base = _single_request_baseline(cfg, params, prompts, max_new)
+
+    def run_engine(sharing):
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=2, max_len=48, page_size=8, prefix_sharing=sharing,
+        ))
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new, rid=i, arrival_step=4 * i)
+        return eng, eng.run()
+
+    eng_s, reqs_s = run_engine(True)
+    eng_u, reqs_u = run_engine(False)
+    for rs, ru, b in zip(reqs_s, reqs_u, base):
+        np.testing.assert_array_equal(np.asarray(rs.out_tokens), b)
+        np.testing.assert_array_equal(np.asarray(ru.out_tokens), b)
+    # rid 1 aliased all 3 full prefix pages; rid 2 also aliased the partial
+    # tail page (its whole prompt was cached) and diverged through COW
+    assert [r.stats.cached_prompt_tokens for r in reqs_s] == [0, 24, 20]
+    assert eng_s.kv.cow_copies >= 1
+    assert eng_s.prefill_chunks < eng_u.prefill_chunks
+    assert eng_s.kv.allocator.pages_allocated < eng_u.kv.allocator.pages_allocated
+    assert not eng_u.kv.sharing and eng_u.kv.cow_copies == 0
+    # refcounts exact after drain: free + index-pinned covers the pool
+    assert _idle_pages(eng_s.kv) == eng_s.kv.allocator.num_pages - 1
+
+
+def test_shared_prefix_zero_recompute_suffix_chunks():
+    """The compute-saving contract, pinned in chunk units: an admission
+    whose prefix is fully cached runs EXACTLY the suffix's chunks — one
+    chunk for a one-page suffix, and a single 1-token logits chunk (write
+    null-routed) when the entire prompt is cached."""
+    cfg = _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    A = rng.integers(0, cfg.vocab_size, size=(32,)).astype(np.int32)
+    eng = Engine(cfg, params, EngineConfig(max_seqs=1, max_len=48, page_size=8))
+    srv = Server(cfg, params, ServeConfig(max_len=64))
+
+    eng.submit(A, 4, rid=0)
+    eng.run()
+    assert eng.prefill_chunks == 4  # cold: ceil(32 / 8)
+
+    # suffix-only: 32 cached tokens + 8 new -> ONE chunk
+    before = eng.prefill_chunks
+    B = np.concatenate([A, rng.integers(0, cfg.vocab_size, size=(8,))
+                        ]).astype(np.int32)
+    rb = eng.submit(B, 4, rid=1)
+    eng.run()
+    assert eng.prefill_chunks - before == 1
+    assert rb.stats.cached_prompt_tokens == 32
+    np.testing.assert_array_equal(
+        np.asarray(rb.out_tokens),
+        srv.generate({"tokens": jnp.asarray(B)[None]}, 4)[0],
+    )
+
+    # fully cached: one 1-token chunk recomputes only the last position's
+    # logits (its K/V write is null-routed — the cache already has it)
+    before = eng.prefill_chunks
+    rc = eng.submit(A.copy(), 4, rid=2)
+    eng.run()
+    assert eng.prefill_chunks - before == 1
+    assert rc.stats.cached_prompt_tokens == 32
+    np.testing.assert_array_equal(
+        np.asarray(rc.out_tokens),
+        srv.generate({"tokens": jnp.asarray(A)[None]}, 4)[0],
+    )
+
+
+def test_shared_prefix_mid_prefill_preemption_resumes_suffix():
+    """A preempted suffix prefill resumes: pages the victim already
+    published to the prefix index survive its release (one index-owned
+    reference), so re-admission aliases them and chunks only what is left
+    — with refcounts exact and outputs bit-identical throughout."""
+    cfg = _paged_cfg(block=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    short = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, size=(16,)).astype(np.int32)
+    max_new = 8
+    base = _single_request_baseline(cfg, params, [short, long], max_new)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=24, page_size=4, num_pages=9,
+        prefill_tokens_per_step=4,
+    ))
+    a = eng.submit(short, max_new, rid=0)
+    b = eng.submit(long, max_new, rid=1)
+    was_preempted_mid_prefill = False
+    for _ in range(200):
+        if not eng.sched.has_work():
+            break
+        mid = b.prefilling and 0 < b.prefill_pos
+        eng.step()
+        if mid and b.state == "waiting":
+            was_preempted_mid_prefill = True
+    eng._flush_pending()
+    assert was_preempted_mid_prefill, "no preemption landed mid-prefill"
+    assert b.stats.n_preemptions >= 1
+    # the re-admission found the preempted prefill's published pages and
+    # resumed at the first uncached page boundary instead of recomputing
+    assert b.stats.cached_prompt_tokens >= 4
+    assert b.stats.cached_prompt_tokens % 4 == 0
+    np.testing.assert_array_equal(np.asarray(a.out_tokens), base[0])
+    np.testing.assert_array_equal(np.asarray(b.out_tokens), base[1])
+    assert _idle_pages(eng.kv) == 8
+
+
+def test_prefix_sharing_capability_matrix():
+    """Shareability is a per-family CacheAdapter capability — the registry
+    refuses nothing: stateful families just fall through to the unshared
+    path, and MoE stacks alias pages without skipping compute."""
+    from repro.models import adapters as A
+
+    expect = {
+        "minicpm-2b": (True, True),  # dense/GQA: full sharing
+        "qwen1.5-110b": (True, True),
+        "starcoder2-7b": (True, True),
+        "granite-moe-3b-a800m": (True, False),  # MoE: alias, recompute
+        "deepseek-v3-671b": (True, False),  # MLA pages + MoE FFN
+        "mamba2-130m": (False, False),  # SSM state rows are slot-local
+        "h2o-danube-3-4b": (False, False),  # SWA rings are slot-local
+        "hymba-1.5b": (False, False),  # hybrid ring+state
+        "whisper-tiny": (False, False),  # audio side inputs taint the stack
+    }
+    for arch, (share, skip) in expect.items():
+        cfg = C.get_config(arch, smoke=True, dtype=jnp.float32)
+        assert A.prefix_shareable(cfg) == share, arch
+        assert A.prefix_compute_skippable(cfg) == skip, arch
+    # MLA over a dense FFN stack (the latent-page parity config) skips too
+    assert A.prefix_compute_skippable(_mla_dense_cfg())
+    # non-shareable families run with sharing requested but disabled —
+    # today's path, no refusal
+    ssm = C.get_config("mamba2-130m", smoke=True, dtype=jnp.float32)
+    kv = PagedKVCache(ssm, PagedCacheConfig(max_seqs=1, max_len=16))
+    assert not kv.sharing and kv.index is None
+
+
+def test_moe_stack_shares_pages_but_recomputes():
+    """'Mixed stacks share the paged segments and recompute the rest': a
+    MoE config aliases prefix pages (memory dedup) while running every
+    prefill chunk, so its outputs stay bit-identical to the non-shared
+    chunked engine — sharing must not widen the documented multi-chunk
+    MoE caveat."""
+    cfg = dataclasses.replace(
+        C.get_config("granite-moe-3b-a800m", smoke=True, dtype=jnp.float32),
+        block=8,
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=(3,))
+                        ]).astype(np.int32),
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=(5,))
+                        ]).astype(np.int32),
+        # the prefix of an already-cached longer page run, ending mid-page:
+        # a recompute family must NOT alias the partial tail page (its
+        # content was dispatched under the publisher's longer chunk — the
+        # regroup caveat), so the match clamps to the full-page walk
+        shared[:20].copy(),
+    ]
+
+    def run_engine(sharing):
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=1, max_len=40, page_size=8, prefix_sharing=sharing,
+        ))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, rid=i)
+        return eng, eng.run()
+
+    eng_s, reqs_s = run_engine(True)
+    eng_u, reqs_u = run_engine(False)
+    assert eng_s.kv.sharing and not eng_s.kv.skip_prefill
+    for rs, ru in zip(reqs_s, reqs_u):  # bit-identical to non-shared
+        assert rs.out_tokens == ru.out_tokens, rs.rid
+    assert [r.stats.cached_prompt_tokens for r in reqs_s] == [0, 24, 16]
+    assert eng_s.kv.cow_copies == 0  # no partial-tail alias -> no COW
+    assert eng_s.prefill_chunks == eng_u.prefill_chunks  # no compute skip
+    assert eng_s.kv.allocator.pages_allocated < eng_u.kv.allocator.pages_allocated
+    # one-shot prefill groups the whole prompt per request, which a
+    # recompute family cannot replay bit-exactly: sharing gates itself off
+    eng_o = Engine(cfg, params, EngineConfig(
+        max_seqs=1, max_len=40, page_size=8, chunked_prefill=False,
+    ))
+    assert not eng_o.kv.sharing
+    # ...but compute-skippable families keep sharing under one-shot prefill
+    assert Engine(
+        _paged_cfg(block=8), M.init_params(_paged_cfg(block=8),
+                                           jax.random.PRNGKey(0)),
+        EngineConfig(max_seqs=1, max_len=40, page_size=8,
+                     chunked_prefill=False),
+    ).kv.sharing
+
+
+def test_moe_capacity_dispatch_regroups_across_chunks():
+    """Pin the *mechanism* of the documented multi-chunk MoE prefill
+    caveat, so the known limit cannot silently widen (or silently start
+    applying to single-chunk prompts): capacity dispatch ranks tokens
+    within their expert per forward call, so a 16-token sequence whose
+    tokens all pick one hot expert drops the overflow half when run
+    one-shot but keeps it when run as two 8-token chunks.  Tokens inside
+    the capacity window are bit-identical either way — which is exactly
+    why single-chunk prompts and ``chunked_prefill=False`` stay exact."""
+    from repro.models import ffn as ffnm
+
+    cfg = dataclasses.replace(
+        C.get_config("granite-moe-3b-a800m", smoke=True, dtype=jnp.float32),
+        capacity_factor=1.0,
+    )
+    p = ffnm.moe_init(jax.random.PRNGKey(0), cfg)
+    # near-identical tokens: every token routes to the same hot expert, so
+    # 16 one-shot tokens overflow Cg = 8 while each 8-token chunk fits
+    base = jax.random.normal(jax.random.PRNGKey(1), (cfg.d_model,), jnp.float32)
+    noise = jax.random.normal(jax.random.PRNGKey(2), (1, 16, cfg.d_model),
+                              jnp.float32)
+    x = jnp.broadcast_to(base, (1, 16, cfg.d_model)) + 1e-2 * noise
+    logits = np.asarray(x[0].astype(jnp.float32) @ p["router"])
+    top1 = logits.argmax(-1)
+    assert (top1 == top1[0]).all(), "setup: tokens must share a hot expert"
+    full, _ = ffnm.moe_forward(p, cfg, x)
+    c1, _ = ffnm.moe_forward(p, cfg, x[:, :8])
+    c2, _ = ffnm.moe_forward(p, cfg, x[:, 8:])
+    chunked = jnp.concatenate([c1, c2], axis=1)
+    # within capacity: identical dispatch, identical bits
+    np.testing.assert_array_equal(np.asarray(full[:, :8]),
+                                  np.asarray(chunked[:, :8]))
+    # past capacity: the one-shot run dropped these tokens' hot-expert
+    # contribution, the per-chunk runs kept it — outputs must differ
+    assert not np.array_equal(np.asarray(full[:, 8:]),
+                              np.asarray(chunked[:, 8:]))
+
+
+def test_moe_unchunked_multi_page_engine_parity():
+    """The caveat's boundary from the other side: with chunking off, a
+    multi-page MoE prompt through the paged engine sees the one-shot
+    dispatch grouping and stays bit-identical to the baseline."""
+    cfg = dataclasses.replace(
+        C.get_config("granite-moe-3b-a800m", smoke=True, dtype=jnp.float32),
+        block=8,
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (17, 20)]
+    base = _single_request_baseline(cfg, params, prompts, 6)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=32, page_size=8, chunked_prefill=False,
+    ))
+    for i, pr in enumerate(prompts):
+        eng.submit(pr, 6, rid=i)
+    for r, b in zip(eng.run(), base):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+
+
+def test_prefill_chunks_per_step_deprecation_warning(monkeypatch):
+    """The chunk-count admission alias warns exactly once per process and
+    only when explicitly set; the default (None) derives the same budget
+    silently."""
+    import warnings as _warnings
+
+    from repro.serve import engine as E
+
+    cfg = _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    monkeypatch.setattr(E, "_chunks_alias_warned", False)
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=1, max_len=16, page_size=8,
+        ))
+        assert eng.tokens_per_step == 4 * eng.chunk_size  # alias default
+    assert not rec  # default config: no warning
+    with pytest.warns(DeprecationWarning, match="prefill_chunks_per_step"):
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=1, max_len=16, page_size=8, prefill_chunks_per_step=2,
+        ))
+    assert eng.tokens_per_step == 2 * eng.chunk_size
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        Engine(cfg, params, EngineConfig(
+            max_seqs=1, max_len=16, page_size=8, prefill_chunks_per_step=2,
+        ))
+    assert not rec  # one-shot: second use stays silent
 
 
 def test_make_requests_deterministic():
