@@ -8,13 +8,12 @@ wall-clock microbench of the pure-jnp blocked ops (XLA:CPU) as a sanity
 signal.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core import blockwise as bw
 from repro.core.backend import resolve_backend
-from repro.core.layout import BlockLayout, to_blockwise
+from repro.core.layout import BlockLayout
 
 
 def dma_descriptors(block_shape, array_shape, esize=2):
@@ -23,16 +22,8 @@ def dma_descriptors(block_shape, array_shape, esize=2):
     For a trailing-dims-contiguous block (BWMA 4-D layout) this is 1; for a
     2-D row-major operand it is the number of non-contiguous row segments.
     """
-    # contiguous iff the block covers full trailing dims except the leading one
-    runs = 1
-    trailing = 1
-    for bdim, adim in zip(reversed(block_shape), reversed(array_shape)):
-        if trailing > 1 and bdim != adim:
-            runs *= bdim
-        trailing *= adim if bdim == adim else 0 or 1
-    # simpler: count rows whose segments are separated in memory
-    # RWMA (bm, bk) block of (M, K): bm segments.  BWMA (1,1,bm,bk) of
-    # (gm, gk, bm, bk): 1 segment.
+    # RWMA (bm, bk) block of (M, K): bm separated row segments.  BWMA
+    # (1,1,bm,bk) of (gm, gk, bm, bk): trailing dims contiguous, 1 segment.
     if len(block_shape) == 2:
         return block_shape[0]
     return 1
@@ -41,7 +32,7 @@ def dma_descriptors(block_shape, array_shape, esize=2):
 def run(scale: float = 1.0, backend: str = "reference"):
     print("# kernel report: DMA contiguity + VMEM per BlockSpec step")
     bm = bk = bn = 128
-    M = K = N = 1024
+    M = K = 1024
     esize = 2  # bf16
     rwma_desc = dma_descriptors((bm, bk), (M, K))
     bwma_desc = dma_descriptors((1, 1, bm, bk), (M // bm, K // bk, bm, bk))

@@ -122,12 +122,12 @@ def _scaled_cfg(args, scale):
     # engines.  ~4L/d=256 keeps compile < 10 s on CPU.
     cfg = C.get_config(args.arch, smoke=True, dtype=jnp.float32)
     import dataclasses
-    if cfg.family == "dense" and scale >= 0.5:
+    if cfg.family == "dense" and scale >= 0.5:  # repro: noqa RPR004 -- bench sizing table, not a dispatch path
         cfg = dataclasses.replace(
             cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
             d_head=32, d_ff=512,
         )
-    elif cfg.attn_type == "mla" and scale >= 0.5:
+    elif cfg.attn_type == "mla" and scale >= 0.5:  # repro: noqa RPR004 -- bench sizing table, not a dispatch path
         cfg = dataclasses.replace(
             cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
             q_lora_rank=96, kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16,

@@ -1,0 +1,3 @@
+"""Analysis tools: the paper's analytic cost model (:mod:`analytic`), the
+roofline sweep (:mod:`roofline`), and the repo-specific static lint pass +
+runtime sanitizer harness (:mod:`staticcheck`)."""

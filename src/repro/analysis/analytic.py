@@ -1,3 +1,5 @@
+# repro: noqa-file RPR004 -- the paper's analytic cost model is inherently
+# per-family math; it never executes layers, so the registry rule is moot
 """Analytic roofline term calculator.
 
 Why analytic: XLA's ``compiled.cost_analysis()`` counts a while-loop body

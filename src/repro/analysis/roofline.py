@@ -1,3 +1,4 @@
+# repro: noqa-file RPR005 -- CLI report generator: prints ARE the output
 """Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
 Per (arch × shape × mesh) cell we report three roofline terms:
@@ -32,9 +33,6 @@ from typing import Dict, List, Optional
 
 import repro.configs as C
 from repro.analysis.analytic import (
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS,
     MeshInfo,
     roofline_terms,
 )

@@ -1,0 +1,483 @@
+"""Rule implementations for repro.analysis.staticcheck.
+
+Each rule is a callable ``(tree, ctx) -> List[Finding]`` registered in
+``RULES``.  Rules are intentionally heuristic: they operate on names and call
+shapes, not types, and favour the idioms actually used in this repo (module
+factories returning ``jax.jit(..., donate_argnums=...)``, ``self._fn = ...``
+bindings, single-statement donate-and-rebind).  Known blind spots are listed
+per rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from . import FilePragmas, Finding
+
+
+@dataclasses.dataclass
+class RuleContext:
+    path: str
+    source_lines: Sequence[str]
+    pragmas: FilePragmas
+
+    def snippet(self, line: int) -> str:
+        if 0 < line <= len(self.source_lines):
+            return self.source_lines[line - 1]
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(
+            rule=rule,
+            path=self.path,
+            line=line,
+            col=getattr(node, "col_offset", 0),
+            message=message,
+            snippet=self.snippet(line),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain of plain names, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    return _dotted(node.func) in ("jax.jit", "jit")
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._rpr_parent = parent  # type: ignore[attr-defined]
+
+
+def _parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_rpr_parent", None)
+
+
+def _enclosing(node: ast.AST, kinds) -> Optional[ast.AST]:
+    cur = _parent(node)
+    while cur is not None and not isinstance(cur, kinds):
+        cur = _parent(cur)
+    return cur
+
+
+def _flat_targets(targets: Sequence[ast.expr]) -> List[ast.expr]:
+    out: List[ast.expr] = []
+    stack = list(targets)
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        elif isinstance(t, ast.Starred):
+            stack.append(t.value)
+        else:
+            out.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPR001 — use-after-donation
+# ---------------------------------------------------------------------------
+#
+# Resolution pipeline:
+#   1. functions whose every `return` is a literal int/tuple-of-ints
+#      (e.g. ``_donate_caches() -> (1,)``) become resolvable constants;
+#   2. functions that ``return jax.jit(..., donate_argnums=<resolvable>)``
+#      become *factories* carrying donate positions;
+#   3. assignments binding a jit call or a factory call to a name or
+#      ``self.attr`` propagate those positions to the binding;
+#   4. every call through a binding (``self._decode(...)``), a direct factory
+#      product (``_install_fn(cfg)(...)``), or an inline jit call donates the
+#      argument expressions at the recorded positions.
+#
+# A donated Name/Attribute argument is safe when the *same statement* rebinds
+# it (``x, y = f(x)``); otherwise the first textually-later access in the
+# enclosing function decides: Store => safe rebind, Load => finding.
+# Blind spots: donation through intermediate locals, cross-function flows,
+# and loop-carried reads before the loop's rebind.
+
+
+def _literal_int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals: List[int] = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                vals.append(e.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+def _collect_const_tuple_fns(tree: ast.AST) -> Dict[str, Tuple[int, ...]]:
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        returns = [n for n in ast.walk(node) if isinstance(n, ast.Return)]
+        vals = {_literal_int_tuple(r.value) for r in returns if r.value}
+        if len(vals) == 1 and None not in vals and returns:
+            out[node.name] = vals.pop()
+    return out
+
+
+def _donate_positions(
+    call: ast.Call, const_fns: Dict[str, Tuple[int, ...]]
+) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        lit = _literal_int_tuple(kw.value)
+        if lit is not None:
+            return lit
+        if isinstance(kw.value, ast.Call):
+            name = _dotted(kw.value.func)
+            if name in const_fns:
+                return const_fns[name]
+        return None
+    return None
+
+
+def rule_rpr001(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    _attach_parents(tree)
+    const_fns = _collect_const_tuple_fns(tree)
+
+    # Factories: functions returning a donating jax.jit(...)
+    factories: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for ret in ast.walk(node):
+            if isinstance(ret, ast.Return) and _is_jit_call(ret.value):
+                pos = _donate_positions(ret.value, const_fns)
+                if pos:
+                    factories[node.name] = pos
+
+    # Bindings: `x = jax.jit(...)`, `x = factory(...)`, `self.a = <either>`
+    name_bind: Dict[str, Tuple[int, ...]] = {}
+    attr_bind: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        pos: Optional[Tuple[int, ...]] = None
+        if _is_jit_call(node.value):
+            pos = _donate_positions(node.value, const_fns)
+        else:
+            fname = _dotted(node.value.func)
+            if fname in factories:
+                pos = factories[fname]
+        if not pos:
+            continue
+        for tgt in _flat_targets(node.targets):
+            if isinstance(tgt, ast.Name):
+                name_bind[tgt.id] = pos
+            elif isinstance(tgt, ast.Attribute):
+                attr_bind[tgt.attr] = pos
+
+    # Donating call sites
+    findings: List[Finding] = []
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        pos: Optional[Tuple[int, ...]] = None
+        desc = ""
+        func = call.func
+        if isinstance(func, ast.Name) and func.id in name_bind:
+            pos, desc = name_bind[func.id], func.id
+        elif isinstance(func, ast.Attribute) and func.attr in attr_bind:
+            pos, desc = attr_bind[func.attr], func.attr
+        elif isinstance(func, ast.Call):
+            inner = _dotted(func.func)
+            if inner in factories:
+                pos, desc = factories[inner], f"{inner}(...)"
+            elif _is_jit_call(func):
+                pos = _donate_positions(func, const_fns)
+                desc = "jax.jit(...)"
+        if not pos:
+            continue
+        for p in pos:
+            if p >= len(call.args):
+                continue
+            findings.extend(_check_donated_arg(call, call.args[p], p, desc, ctx))
+    return findings
+
+
+def _check_donated_arg(
+    call: ast.Call, arg: ast.expr, pos: int, desc: str, ctx: RuleContext
+) -> List[Finding]:
+    key = _dotted(arg)
+    if key is None:  # fresh temporary (e.g. jnp.asarray(...)): nothing to track
+        return []
+    stmt = _enclosing(call, ast.stmt) if not isinstance(call, ast.stmt) else call
+    if stmt is None:
+        return []
+    # Same-statement rebind: `out, self.kv.data = self._decode(.., self.kv.data, ..)`
+    if isinstance(stmt, ast.Assign):
+        if any(_dotted(t) == key for t in _flat_targets(stmt.targets)):
+            return []
+    scope = _enclosing(call, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module))
+    if scope is None:
+        return []
+    stmt_end = getattr(stmt, "end_lineno", stmt.lineno)
+    accesses = []
+    for node in ast.walk(scope):
+        if not isinstance(node, (ast.Name, ast.Attribute)):
+            continue
+        if node.lineno <= stmt_end or _dotted(node) != key:
+            continue
+        accesses.append(node)
+    accesses.sort(key=lambda n: (n.lineno, n.col_offset))
+    for node in accesses:
+        is_store = isinstance(node.ctx, (ast.Store, ast.Del)) and not isinstance(
+            _parent(node), ast.AugAssign
+        )
+        if is_store:
+            return []  # rebound before any read
+        return [
+            ctx.finding(
+                "RPR001",
+                node,
+                f"'{key}' may be donated to '{desc}' at line {call.lineno} "
+                f"(donate_argnums position {pos}) and is read here before "
+                "rebinding",
+            )
+        ]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# RPR002 — host sync in a `# repro: hot-loop` function
+# ---------------------------------------------------------------------------
+
+_SYNC_CALLS = {"np.asarray", "np.stack", "numpy.asarray", "numpy.stack"}
+_SYNC_METHODS = {"item", "tolist", "__array__"}
+_SYNC_BUILTINS = {"float", "int", "bool"}
+
+
+def _hot_functions(tree: ast.AST, ctx: RuleContext) -> List[ast.FunctionDef]:
+    hot: List[ast.FunctionDef] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        first = min([node.lineno] + [d.lineno for d in node.decorator_list])
+        if ctx.pragmas.hot_lines & {node.lineno, first, first - 1}:
+            hot.append(node)
+    return hot
+
+
+def rule_rpr002(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in _hot_functions(tree, ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted in _SYNC_CALLS:
+                findings.append(
+                    ctx.finding(
+                        "RPR002",
+                        node,
+                        f"`{dotted}` in hot-loop `{fn.name}` forces a "
+                        "device->host sync; defer or pragma the sanctioned "
+                        "sync point",
+                    )
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS
+            ):
+                findings.append(
+                    ctx.finding(
+                        "RPR002",
+                        node,
+                        f"`.{node.func.attr}()` in hot-loop `{fn.name}` "
+                        "forces a device->host sync",
+                    )
+                )
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _SYNC_BUILTINS
+                and node.args
+                and not all(isinstance(a, ast.Constant) for a in node.args)
+            ):
+                findings.append(
+                    ctx.finding(
+                        "RPR002",
+                        node,
+                        f"`{node.func.id}(...)` in hot-loop `{fn.name}` "
+                        "blocks on the device value; defer or pragma if this "
+                        "sync is sanctioned",
+                    )
+                )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR003 — jax.jit constructed inside a loop
+# ---------------------------------------------------------------------------
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_COMPS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+
+def rule_rpr003(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    _attach_parents(tree)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not _is_jit_call(node):
+            continue
+        cur = _parent(node)
+        container = None
+        while cur is not None:
+            if isinstance(cur, _LOOPS + _COMPS):
+                container = cur
+                break
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a def inside a loop re-jits per iteration only when called;
+                # stop at the function boundary — RPR003 targets direct
+                # construction in the loop body.
+                break
+            cur = _parent(cur)
+        if container is not None:
+            kind = "comprehension" if isinstance(container, _COMPS) else "loop"
+            findings.append(
+                ctx.finding(
+                    "RPR003",
+                    node,
+                    f"jax.jit constructed inside a {kind} (line "
+                    f"{container.lineno}): each iteration re-traces; hoist "
+                    "the jit or memoize the jitted callable",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR004 — family branch outside the adapter registry
+# ---------------------------------------------------------------------------
+
+FAMILY_LITERALS = {
+    "dense",
+    "moe",
+    "ssm",
+    "hybrid",
+    "encdec",
+    "vlm",
+    "mla",
+    "swa",
+    "full",
+}
+_SUBJECT_HINTS = {"family", "fam", "attn_type", "kind"}
+_REGISTRY_SUFFIX = ("src", "repro", "models", "adapters.py")
+
+
+def _is_registry_file(path: str) -> bool:
+    parts = Path(path).parts
+    return parts[-len(_REGISTRY_SUFFIX):] == _REGISTRY_SUFFIX or parts[-3:] == (
+        "repro",
+        "models",
+        "adapters.py",
+    )
+
+
+def _family_strings(node: ast.expr) -> Set[str]:
+    vals: Set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        vals.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                vals.add(e.value)
+    return vals & FAMILY_LITERALS
+
+
+def rule_rpr004(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    if _is_registry_file(ctx.path):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        lits: Set[str] = set()
+        for side in [node.left] + list(node.comparators):
+            lits |= _family_strings(side)
+        if not lits:
+            continue
+        subjects = {
+            n.id for n in ast.walk(node) if isinstance(n, ast.Name)
+        } | {n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+        if not (subjects & _SUBJECT_HINTS):
+            continue
+        findings.append(
+            ctx.finding(
+                "RPR004",
+                node,
+                f"branch on layer-family literal(s) {sorted(lits)} outside "
+                "the adapter registry (src/repro/models/adapters.py); add a "
+                "capability flag or adapter hook instead",
+            )
+        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR005 — stray print / jax.debug.print / breakpoint in src/
+# ---------------------------------------------------------------------------
+
+_DEBUG_CALLS = {
+    "print": "print()",
+    "breakpoint": "breakpoint()",
+    "jax.debug.print": "jax.debug.print()",
+    "jax.debug.breakpoint": "jax.debug.breakpoint()",
+}
+
+
+def rule_rpr005(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    if "src" not in Path(ctx.path).parts:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted in _DEBUG_CALLS:
+            findings.append(
+                ctx.finding(
+                    "RPR005",
+                    node,
+                    f"stray `{_DEBUG_CALLS[dotted]}` in src/; use logging or "
+                    "pragma CLI entry points",
+                )
+            )
+    return findings
+
+
+RULES: Dict[str, Callable[[ast.AST, RuleContext], List[Finding]]] = {
+    "RPR001": rule_rpr001,
+    "RPR002": rule_rpr002,
+    "RPR003": rule_rpr003,
+    "RPR004": rule_rpr004,
+    "RPR005": rule_rpr005,
+}

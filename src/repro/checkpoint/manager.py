@@ -27,7 +27,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -47,13 +47,13 @@ class CheckpointManager:
         """Snapshot ``tree`` at ``step``.  Non-blocking by default."""
         self.wait()  # one outstanding save at a time
         leaves, treedef = jax.tree.flatten(tree)
-        host_leaves = [np.asarray(l) for l in leaves]  # host copy now
+        host_leaves = [np.asarray(x) for x in leaves]  # host copy now
         meta = {
             "step": int(step),
             "treedef": str(treedef),
             "n_leaves": len(leaves),
-            "shapes": [list(l.shape) for l in host_leaves],
-            "dtypes": [str(l.dtype) for l in host_leaves],
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [str(x.dtype) for x in host_leaves],
             "paths": [str(p) for p, _ in
                       jax.tree_util.tree_flatten_with_path(tree)[0]],
             "time": time.time(),
@@ -149,7 +149,7 @@ class CheckpointManager:
             )
         else:
             tree = jax.tree.map(
-                lambda a, l: jax.numpy.asarray(a, dtype=l.dtype), tree,
+                lambda a, x: jax.numpy.asarray(a, dtype=x.dtype), tree,
                 jax.tree.unflatten(treedef, leaves),
             )
         return step, tree

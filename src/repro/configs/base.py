@@ -1,8 +1,10 @@
+# repro: noqa-file RPR004 -- the family field is *defined* and validated
+# here; everything downstream of configs must go through the registry
 """Unified model configuration for every assigned architecture family."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax.numpy as jnp
 

@@ -6,18 +6,18 @@ the assignment's skip rules (long_500k only for sub-quadratic archs).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import SHAPES, ModelConfig
 from repro.models import model as M
 
 
 def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
     """(runnable?, reason-if-not) for an (arch, shape) cell."""
-    shape = SHAPES[shape_name]
+    SHAPES[shape_name]  # validate the shape name (KeyError on a typo)
     if shape_name == "long_500k" and not cfg.is_subquadratic:
         return False, (
             "long_500k needs sub-quadratic attention; "

@@ -33,7 +33,6 @@ import functools
 from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import blockwise as bw
 from repro.core.blockwise import Blocked

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import blockwise as bw
 from repro.core.backend import Backend, resolve_backend
-from repro.core.layout import BlockLayout, LayoutPolicy, to_blockwise
+from repro.core.layout import BlockLayout, to_blockwise
 
 
 @dataclasses.dataclass(frozen=True)

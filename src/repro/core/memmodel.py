@@ -98,8 +98,8 @@ def gemm_trace(
     after the k loop, write C[i,j].  Returns the interleaved line trace and
     per-matrix access/segment counts (for the address-generation overhead).
     """
-    I, J, Kt = M // T, N // T, K // T
-    ii = np.arange(I, dtype=np.int64)[:, None, None, None]
+    It, J, Kt = M // T, N // T, K // T
+    ii = np.arange(It, dtype=np.int64)[:, None, None, None]
     jj = np.arange(J, dtype=np.int64)[None, :, None, None]
     kk = np.arange(Kt, dtype=np.int64)[None, None, :, None]
     rr = np.arange(T, dtype=np.int64)[None, None, None, :]
@@ -109,41 +109,41 @@ def gemm_trace(
         # A tile (i,k): T row segments at stride K*esize
         a_addr = base_a + ((ii * T + rr) * K + kk * T) * esize
         b_addr = base_b + ((kk * T + rr) * N + jj * T) * esize
-        a_lines = _seg_lines(np.broadcast_to(a_addr, (I, J, Kt, T)), T * esize)
-        b_lines = _seg_lines(np.broadcast_to(b_addr, (I, J, Kt, T)), T * esize)
-        a_lines = a_lines.reshape(I, J, Kt, -1)
-        b_lines = b_lines.reshape(I, J, Kt, -1)
+        a_lines = _seg_lines(np.broadcast_to(a_addr, (It, J, Kt, T)), T * esize)
+        b_lines = _seg_lines(np.broadcast_to(b_addr, (It, J, Kt, T)), T * esize)
+        a_lines = a_lines.reshape(It, J, Kt, -1)
+        b_lines = b_lines.reshape(It, J, Kt, -1)
         c_addr = base_c + ((ii * T + rr) * N + jj * T) * esize
         c_lines = _seg_lines(
-            np.broadcast_to(c_addr[:, :, 0, :], (I, J, T)), T * esize
-        ).reshape(I, J, -1)
+            np.broadcast_to(c_addr[:, :, 0, :], (It, J, T)), T * esize
+        ).reshape(It, J, -1)
         segs_per_tile = T
     elif layout == "bwma":
         # A tile (i,k): one contiguous T*T block (paper Fig. 4d)
         a_addr = (base_a + (ii * Kt + kk) * (T * T) * esize) + zero
         b_addr = (base_b + (kk * J + jj) * (T * T) * esize) + zero
         a_lines = _seg_lines(
-            np.broadcast_to(a_addr[..., 0], (I, J, Kt)), T * T * esize
-        ).reshape(I, J, Kt, -1)
+            np.broadcast_to(a_addr[..., 0], (It, J, Kt)), T * T * esize
+        ).reshape(It, J, Kt, -1)
         b_lines = _seg_lines(
-            np.broadcast_to(b_addr[..., 0], (I, J, Kt)), T * T * esize
-        ).reshape(I, J, Kt, -1)
+            np.broadcast_to(b_addr[..., 0], (It, J, Kt)), T * T * esize
+        ).reshape(It, J, Kt, -1)
         c_addr = (base_c + (ii * J + jj) * (T * T) * esize) + zero
         c_lines = _seg_lines(
-            np.broadcast_to(c_addr[:, :, 0, 0], (I, J)), T * T * esize
-        ).reshape(I, J, -1)
+            np.broadcast_to(c_addr[:, :, 0, 0], (It, J)), T * T * esize
+        ).reshape(It, J, -1)
         segs_per_tile = 1
     else:
         raise ValueError(layout)
 
     # interleave per (i,j,k): A lines then B lines; append C write per (i,j)
-    step = np.concatenate([a_lines, b_lines], axis=-1)  # (I,J,Kt,L)
-    per_ij = step.reshape(I, J, -1)
+    step = np.concatenate([a_lines, b_lines], axis=-1)  # (It,J,Kt,L)
+    per_ij = step.reshape(It, J, -1)
     per_ij = np.concatenate([per_ij, c_lines], axis=-1)
     trace = per_ij.reshape(-1)
     meta = {
-        "tiles": I * J * Kt,
-        "addr_segments": (2 * I * J * Kt + I * J) * segs_per_tile,
+        "tiles": It * J * Kt,
+        "addr_segments": (2 * It * J * Kt + It * J) * segs_per_tile,
         "flops": 2 * M * K * N,
     }
     return trace, meta
@@ -265,8 +265,6 @@ def simulate_trace(lines: np.ndarray, cache: CacheConfig) -> MemStats:
     )
     # prefetched lines are fetched ahead -> hit latency at use time; demand
     # misses pay L2 or DRAM latency.
-    demand_l2 = lines[demand_miss]
-    demand_l2_miss = _dm_miss(np.concatenate([l2_stream]), cache.l2_bytes)  # noqa
     # approximate: fraction of demand misses that also miss L2
     frac_dram = st.l2_misses / max(st.l2_accesses, 1)
     n_demand_dram = int(round(st.l1_misses * frac_dram))

@@ -21,7 +21,7 @@ the rules must produce *valid* specs for every architecture in the pool.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -151,8 +151,6 @@ def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_shape,
     ax = MeshAxes.from_mesh(mesh)
     tp_size = _axis_size(mesh, ax.tp)
     dp_size = _dp_size(mesh, ax)
-    ep = ep_axes(mesh)
-    ep_size = _axis_size(mesh, ep[0]) * tp_size
     if mode == "serve":
         serve_axes = ax.dp + (ax.tp,)
         serve_size = dp_size * tp_size

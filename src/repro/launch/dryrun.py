@@ -1,3 +1,4 @@
+# repro: noqa-file RPR005 -- CLI driver: the report prints ARE the output
 import os
 
 os.environ["XLA_FLAGS"] = (
@@ -26,7 +27,6 @@ import traceback
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -1,3 +1,4 @@
+# repro: noqa-file RPR005 -- CLI driver: the report prints ARE the output
 """Serving entry point: continuous batching over the block-paged KV cache.
 
 Multi-request workload (Poisson-ish staggered arrivals, fixed seeds):
@@ -27,7 +28,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as C
 from repro.models import adapters as A
@@ -92,6 +92,7 @@ def run_workload(cfg, params, args):
             prefill_tokens_per_step=args.prefill_tokens_per_step,
             prefill_chunks_per_step=args.prefill_chunks_per_step,
             prefix_sharing=not args.no_prefix_sharing,
+            debug_audit=args.debug_audit,
         ))
         for r in reqs:
             eng.submit(r["prompt"], r["max_new_tokens"],
@@ -174,6 +175,10 @@ def main():
                     help="disable the shared-prefix page cache (radix "
                          "index + refcounted aliasing + copy-on-write); "
                          "stateful families disable it automatically")
+    ap.add_argument("--debug-audit", action="store_true",
+                    help="run the paged-KV refcount auditor after every "
+                         "engine step (slow; catches page leaks / double "
+                         "frees at the step that introduces them)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -63,12 +63,12 @@ def make_train_step(
 
             def body(carry, mb):
                 acc, loss_acc = carry
-                (l, met), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                (lv, met), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
                 acc = jax.tree.map(
                     lambda a, x: a + x.astype(jnp.float32) / accum_steps,
                     acc, g,
                 )
-                return (acc, loss_acc + l / accum_steps), met
+                return (acc, loss_acc + lv / accum_steps), met
 
             (grads, loss), metrics = jax.lax.scan(
                 body, (g0, jnp.zeros((), jnp.float32)), micro

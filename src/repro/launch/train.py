@@ -1,3 +1,4 @@
+# repro: noqa-file RPR005 -- CLI driver: the report prints ARE the output
 """Training entry point.
 
   PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke \
@@ -11,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 import repro.configs as C

@@ -98,7 +98,7 @@ def gqa_forward(
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, S, _ = x.shape
     window = window if window is not None else (
-        cfg.window if cfg.attn_type == "swa" else None
+        cfg.window if cfg.attn_type == "swa" else None  # repro: noqa RPR004 -- default-arg resolution, not family dispatch
     )
     q, k, v = _project_qkv(p, cfg, x, positions)
 

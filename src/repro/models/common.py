@@ -1,7 +1,6 @@
 """Shared building blocks: norms, RoPE / M-RoPE, chunked attention math."""
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.axes import constrain
-from repro.models.common import activation, dense, dense_init
+from repro.models.common import dense, dense_init
 
 
 # --------------------------------------------------------------------------

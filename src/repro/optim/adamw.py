@@ -27,7 +27,9 @@ class OptConfig:
 
 def adamw_init(params, oc: "OptConfig" = None) -> Dict[str, Any]:
     dt = oc.moment_dtype if oc is not None else jnp.float32
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -38,7 +40,7 @@ def adamw_init(params, oc: "OptConfig" = None) -> Dict[str, Any]:
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
     )
 
 

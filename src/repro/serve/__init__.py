@@ -15,6 +15,7 @@ from repro.models.adapters import (
     unsupported_reason,
 )
 from repro.serve.kvcache import (
+    CacheAudit,
     PageAllocator,
     PagedCacheConfig,
     PagedKVCache,
@@ -23,6 +24,7 @@ from repro.serve.kvcache import (
 from repro.serve.scheduler import Request, RequestStats, Scheduler
 
 __all__ = [
+    "CacheAudit",
     "Engine",
     "EngineConfig",
     "PageAllocator",

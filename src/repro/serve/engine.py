@@ -269,6 +269,10 @@ class EngineConfig:
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
+    # run the PagedKVCache refcount auditor after every step (sanitizer /
+    # debugging aid: cross-checks allocator refcounts against slot page
+    # tables and the prefix index — free + index-pinned + slot-held == total)
+    debug_audit: bool = False
 
 
 _DEFAULT_CHUNKS_PER_STEP = 4  # the alias's historical default
@@ -395,17 +399,22 @@ class Engine:
 
     # -- sampling -----------------------------------------------------------
 
-    def _sample(self, row_logits: jnp.ndarray, req: Request) -> int:
+    def _sample(self, row_logits: jnp.ndarray, req: Request) -> int:  # repro: hot-loop
         """Sample one token from a (V,) logits row (fp32, greedy or temp)."""
         lf = row_logits.astype(jnp.float32)
         if self.ec.temperature <= 0:
-            return int(jnp.argmax(lf))
+            # callers that can defer use the on-device greedy feedback path,
+            # not _sample — this sync only runs at scheduling events
+            return int(jnp.argmax(lf))  # repro: noqa RPR002 -- sanctioned sync
         # per-request, per-position key: independent of scheduling order
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(self.ec.seed), req.rid),
             len(req.out_tokens),
         )
-        return int(jax.random.categorical(key, lf / self.ec.temperature))
+        # host sampling needs the value now; the greedy path never comes here
+        return int(  # repro: noqa RPR002 -- sanctioned sync
+            jax.random.categorical(key, lf / self.ec.temperature)
+        )
 
     def _append_token(self, slot: int, req: Request, tok: int) -> None:
         req.out_tokens.append(tok)
@@ -416,17 +425,21 @@ class Engine:
         if req.done or (self.ec.eos_id is not None and tok == self.ec.eos_id):
             self.sched.finish(slot, self.step_count)
 
-    def _flush_pending(self) -> None:
+    def _flush_pending(self) -> None:  # repro: hot-loop
         """Materialize the deferred on-device tokens into out_tokens.
 
         All logged arrays are already computed (or in flight) on the device,
         so this drains the async queue once instead of once per step."""
         if not self._pending:
             return
-        rows = np.stack([np.asarray(g) for g, _ in self._pending])
+        # THE deferred-sync point: the only place the greedy decode loop
+        # pays device->host, amortized over every step since the last flush
+        rows = np.stack(  # repro: noqa RPR002 -- sanctioned deferred sync
+            [np.asarray(g) for g, _ in self._pending]  # repro: noqa RPR002
+        )
         for row, (_, running) in zip(rows, self._pending):
             for slot, req in running:
-                req.out_tokens.append(int(row[slot]))
+                req.out_tokens.append(int(row[slot]))  # repro: noqa RPR002 -- host ndarray
                 req.n_pending -= 1
         self._pending.clear()
 
@@ -475,7 +488,7 @@ class Engine:
                                    self._extras_batch(req))
             self.kv.install_partial(slot, src)
 
-    def _prefill_one_chunk(self, slot: int, req: Request) -> int:
+    def _prefill_one_chunk(self, slot: int, req: Request) -> int:  # repro: hot-loop
         """Feed the next chunk of a slot's prompt through the paged caches.
 
         The chunk step donates the cache pytree — the pool is written in
@@ -535,7 +548,7 @@ class Engine:
 
     # -- engine steps -------------------------------------------------------
 
-    def _admit_and_prefill(self) -> None:
+    def _admit_and_prefill(self) -> None:  # repro: hot-loop
         admitted = self.sched.admit(self.step_count)
         if not self.ec.chunked_prefill:
             for slot, req in admitted:
@@ -560,7 +573,7 @@ class Engine:
             if budget <= 0:
                 break
 
-    def _decode_once(self) -> None:
+    def _decode_once(self) -> None:  # repro: hot-loop
         decoding = self.sched.decoding
         deficit = sum(
             self.kv.growth_deficit(slot, req.next_pos) for slot, req in decoding
@@ -608,12 +621,14 @@ class Engine:
             if req.done:
                 self.sched.finish(slot, self.step_count)
 
-    def step(self) -> None:
+    def step(self) -> None:  # repro: hot-loop
         """One engine iteration: arrivals -> admissions (prefill) -> decode."""
         self.sched.poll_arrivals(self.step_count)
         self._admit_and_prefill()
         self._decode_once()
         self.step_count += 1
+        if self.ec.debug_audit:
+            self.kv.audit()
 
     def run(self, max_steps: int = 1_000_000) -> List[Request]:
         """Drive until every submitted request finishes; returns the

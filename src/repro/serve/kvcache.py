@@ -508,7 +508,7 @@ class PagedKVCache:
             self._table_dev = None
         return True
 
-    def prepare_decode_write(self, slot: int, next_pos: int) -> bool:
+    def prepare_decode_write(self, slot: int, next_pos: int) -> bool:  # repro: hot-loop
         """Make position ``next_pos`` privately writable: copy-on-write.
 
         A decode write must not land in a page other requests (or the
@@ -560,8 +560,12 @@ class PagedKVCache:
         self._table[slot] = NULL_PAGE
         self._table_dev = None
 
-    def page_table(self) -> jnp.ndarray:
-        """Device mirror of the page tables (re-uploaded only when dirty)."""
+    def page_table(self) -> jnp.ndarray:  # repro: hot-loop
+        """Device mirror of the page tables (re-uploaded only when dirty).
+
+        The ``jnp.asarray`` here is a host->device upload (not a sync) and
+        runs only on steps where a table entry actually changed; steady-state
+        decode reuses ``_table_dev`` without touching the host array."""
         if self._table_dev is None:
             self._table_dev = jnp.asarray(self._table)
         return self._table_dev
@@ -630,7 +634,7 @@ class PagedKVCache:
 
     # -- chunk write targets -------------------------------------------------
 
-    def token_targets(
+    def token_targets(  # repro: hot-loop
         self, slot: int, start: int, n: int
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Per-token (physical page, in-page offset) for positions
@@ -640,7 +644,9 @@ class PagedKVCache:
         the slot serves from *aliased* prefix pages: their cache entries
         already exist and are shared, so a recompute's (bit-identical)
         write must be dropped, not land in a page other requests read."""
-        pages = np.asarray(self._pages[slot], np.int64)
+        pages = np.asarray(  # repro: noqa RPR002 -- host list -> host array
+            self._pages[slot], np.int64
+        )
         pos = np.arange(start, start + n)
         lp = pos // self.page_size
         phys = np.where(
@@ -662,3 +668,85 @@ class PagedKVCache:
 
     def cache_bytes(self) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
+
+    # -- debug auditor -------------------------------------------------------
+
+    def audit(self) -> "CacheAudit":
+        """Cross-check the allocator's refcounts against the page holders.
+
+        Every usable physical page must satisfy::
+
+            refcount(page) == (#slots mapping it) + (1 if index-pinned)
+            page in free list  <=>  refcount(page) == 0
+
+        and the pool must balance: ``free + index_pinned + slot_held ==
+        total`` (pages both index-pinned and slot-mapped count once, as
+        index-pinned).  Raises ``AssertionError`` on any violation; returns
+        the accounting breakdown.  Pure host bookkeeping — safe to run
+        after every engine step (``EngineConfig.debug_audit``) or from
+        tests as the shared refcount auditor.
+        """
+        alloc = self.allocator
+        n = alloc.num_pages
+        expected = [0] * n
+        for slot, pages in self._pages.items():
+            assert len(pages) <= self.max_pages_per_seq, (
+                f"slot {slot} maps {len(pages)} pages > max_pages_per_seq "
+                f"{self.max_pages_per_seq}"
+            )
+            for lp, p in enumerate(pages):
+                assert NULL_PAGE < p < n, f"slot {slot} maps invalid page {p}"
+                assert self._table[slot, lp] == p, (
+                    f"slot {slot} local page {lp}: table says "
+                    f"{self._table[slot, lp]}, _pages says {p}"
+                )
+                expected[p] += 1
+        index_pages: set = set()
+        if self.index is not None:
+            for node in self.index._walk():
+                p = node.page
+                assert NULL_PAGE < p < n, f"prefix index pins invalid page {p}"
+                assert p not in index_pages, (
+                    f"prefix index pins page {p} from two nodes"
+                )
+                index_pages.add(p)
+                expected[p] += 1
+        free = set(alloc._free)
+        assert len(free) == len(alloc._free), "free list contains duplicates"
+        assert NULL_PAGE not in free and alloc._ref[NULL_PAGE] == 0, (
+            "null page must stay unallocated and unreferenced"
+        )
+        for p in range(NULL_PAGE + 1, n):
+            assert alloc._ref[p] == expected[p], (
+                f"page {p}: refcount {alloc._ref[p]} != {expected[p]} "
+                "(slot holders + index pin)"
+            )
+            assert (p in free) == (expected[p] == 0), (
+                f"page {p}: refcount {expected[p]} inconsistent with "
+                f"free-list membership ({p in free})"
+            )
+        slot_pages = {p for pages in self._pages.values() for p in pages}
+        stats = CacheAudit(
+            total=n - 1,
+            free=len(free),
+            index_pinned=len(index_pages),
+            slot_held=len(slot_pages - index_pages),
+        )
+        assert stats.free + stats.index_pinned + stats.slot_held == stats.total, (
+            f"page accounting does not balance: {stats}"
+        )
+        return stats
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAudit:
+    """Page accounting snapshot from :meth:`PagedKVCache.audit`.
+
+    ``total`` excludes the reserved null page; a page that is both
+    index-pinned and slot-mapped counts under ``index_pinned``.
+    """
+
+    total: int
+    free: int
+    index_pinned: int
+    slot_held: int

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,8 +101,8 @@ class Trainer:
                     mb[k] = split(v)
 
             def body(acc, one):
-                l, met = M.loss_fn(cfg, params, one)
-                return acc + l / tc.accum_steps, met
+                lv, met = M.loss_fn(cfg, params, one)
+                return acc + lv / tc.accum_steps, met
 
             total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), mb)
             return total, {"ce": total, "aux": jnp.zeros((), jnp.float32)}
@@ -172,7 +172,7 @@ class Trainer:
                 )
             if step % self.tc.log_every == 0:
                 history.append({"step": step, "loss": loss, "s": dt})
-                print(f"step {step:6d} loss {loss:.4f} ({dt:.2f}s)", flush=True)
+                print(f"step {step:6d} loss {loss:.4f} ({dt:.2f}s)", flush=True)  # repro: noqa RPR005 -- training progress log
             if (
                 self.ckpt
                 and self.tc.checkpoint_every

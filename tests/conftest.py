@@ -5,5 +5,58 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize",
+        action="store_true",
+        default=False,
+        help=(
+            "enable the runtime sanitizer harness (tests marked `sanitize`: "
+            "transfer-guarded engine steps, tracer-leak checks, retrace "
+            "budgets, per-step KV refcount audits)"
+        ),
+    )
+
+
+@pytest.fixture
+def sanitize_enabled(request):
+    return request.config.getoption("--sanitize")
+
+
+class RetraceBudget:
+    """Assert jitted callables stay within a declared compile-count budget.
+
+    Register each jitted function with :meth:`track`; teardown (or an
+    explicit :meth:`verify`) reads ``_cache_size()`` and fails the test if
+    any callable traced more entries than budgeted — the repo's guard
+    against retrace churn (lint-side twin: staticcheck rule RPR003).
+    """
+
+    def __init__(self):
+        self._entries = []
+
+    def track(self, jitted, budget, label=""):
+        assert hasattr(jitted, "_cache_size"), (
+            f"{label or jitted}: not a jitted callable (no _cache_size)"
+        )
+        self._entries.append((jitted, budget, label))
+
+    def verify(self):
+        for fn, budget, label in self._entries:
+            n = fn._cache_size()
+            assert n <= budget, (
+                f"retrace budget exceeded{f' ({label})' if label else ''}: "
+                f"{n} compiled entries > budget {budget}"
+            )
+
+
+@pytest.fixture
+def retrace_budget():
+    tracker = RetraceBudget()
+    yield tracker
+    tracker.verify()

@@ -6,7 +6,6 @@ baseline and the reference blockwise backend to <= 1e-4 max abs error on
 BERT-base-shaped inputs, including ragged (non-block-multiple) shapes.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """End-to-end blocked encoder (the paper's BERT case study, reduced dims)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encoder as enc

@@ -1,5 +1,4 @@
 """Property tests for the BWMA layout itself (the paper's core object)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

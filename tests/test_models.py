@@ -108,7 +108,7 @@ def test_dense_decode_matches_forward():
 def test_swa_ring_buffer_decode():
     """SWA decode past the window: ring buffer must keep only live tokens."""
     cfg = C.get_config("h2o-danube-3-4b", smoke=True, dtype=jnp.float32)
-    assert cfg.attn_type == "swa" and cfg.window == 8
+    assert cfg.attn_type == "swa" and cfg.window == 8  # repro: noqa RPR004 -- asserts the fixture config, no dispatch
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     B, S = 1, 24
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)

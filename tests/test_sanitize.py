@@ -1,0 +1,160 @@
+"""Runtime sanitizer harness for the serving stack (opt-in: ``--sanitize``).
+
+The static half of the correctness backstop is ``repro.analysis.staticcheck``
+(rules RPR001-RPR005); this file is the runtime half, enforcing the same
+invariants on a live engine:
+
+* **transfer guard** — the jitted decode/chunk steps run under
+  ``jax.transfer_guard("disallow")``: any implicit device<->host transfer
+  inside the hot loop fails the test (the deferred-sync design means the
+  only sanctioned syncs happen *outside* the guarded calls);
+* **tracer leaks** — the chunked-prefill path runs under
+  ``jax.check_tracer_leaks()``;
+* **retrace budget** — the ``retrace_budget`` fixture asserts
+  ``_cache_size()`` compile counts stay within the declared budget;
+* **refcount audit** — ``EngineConfig(debug_audit=True)`` cross-checks the
+  page-pool accounting (free + index-pinned + slot-held == total) after
+  every engine step.
+
+All tests here are skipped unless pytest runs with ``--sanitize`` (CI runs
+them as a dedicated smoke job on the dense family).
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import model as M
+from repro.serve import Engine, EngineConfig, engine as E
+
+pytestmark = pytest.mark.sanitize
+
+
+@pytest.fixture(autouse=True)
+def _sanitize_only(request):
+    if not request.config.getoption("--sanitize"):
+        pytest.skip("runtime sanitizers disabled (enable with pytest --sanitize)")
+
+
+def _cfg(**over):
+    cfg = C.get_config("minicpm-2b", smoke=True, dtype=jnp.float32)
+    return dataclasses.replace(cfg, **over)
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+        for n in lengths
+    ]
+
+
+def _guarded(fn):
+    """Run a jitted callable under a disallow-everything transfer guard.
+
+    Python evaluates the argument expressions *before* the wrapper body, so
+    explicit host->device staging at the call sites (``jnp.asarray(toks)``,
+    the dirty-tracked page-table upload) stays legal while the jitted step
+    itself must be transfer-free.
+    """
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with jax.transfer_guard("disallow"):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+
+def test_engine_steps_run_under_transfer_guard():
+    """Chunked prefill + paged decode with every jitted step transfer-
+    guarded: outputs must match the unguarded engine exactly, proving the
+    hot loop's only host syncs are the sanctioned deferred ones."""
+    cfg = _cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (12, 9, 14))
+    ref = Engine(cfg, params, EngineConfig(max_seqs=2, max_len=32, page_size=8))
+    for i, p in enumerate(prompts):
+        ref.submit(p, 8, rid=i, arrival_step=i)
+    ref_out = [np.asarray(r.out_tokens) for r in ref.run()]
+
+    eng = Engine(cfg, params, EngineConfig(max_seqs=2, max_len=32, page_size=8))
+    eng._decode = _guarded(eng._decode)
+    eng._chunk_fn = _guarded(eng._chunk_fn)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 8, rid=i, arrival_step=i)
+    reqs = eng.run()
+    assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
+    for r, b in zip(reqs, ref_out):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+
+
+def test_chunked_prefill_no_tracer_leaks():
+    """The whole chunked-prefill + decode drive traced under
+    jax.check_tracer_leaks (block=4 geometry keeps the memoized jits cold,
+    so tracing actually happens inside the context)."""
+    cfg = _cfg(block=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    with jax.check_tracer_leaks():
+        eng = Engine(
+            cfg, params, EngineConfig(max_seqs=2, max_len=24, page_size=4)
+        )
+        for i, p in enumerate(_prompts(cfg, (10, 7, 11), seed=1)):
+            eng.submit(p, 4, rid=i)
+        reqs = eng.run()
+    assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
+
+
+def test_engine_retrace_budget(retrace_budget):
+    """20 distinct prompt lengths through fresh jit instances: the chunk
+    step may compile one full-chunk shape plus the bucketed final-chunk
+    set; the decode step has exactly one shape."""
+    cfg = _cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, EngineConfig(max_seqs=2, max_len=80, page_size=8))
+    # fresh jits: the memoized ones are shared across engines/tests and
+    # would pollute the entry counts
+    eng._chunk_fn = jax.jit(
+        functools.partial(M.prefill_chunk, cfg), donate_argnums=(1,)
+    )
+    eng._decode = jax.jit(
+        functools.partial(E._paged_step, cfg), donate_argnums=(1,)
+    )
+    retrace_budget.track(
+        eng._chunk_fn, 1 + int(math.log2(eng.chunk_size)) + 1, "prefill_chunk"
+    )
+    retrace_budget.track(eng._decode, 1, "paged_decode")
+    rng = np.random.default_rng(9)
+    for i, n in enumerate(range(1, 41, 2)):
+        eng.submit(
+            rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32), 2, rid=i
+        )
+    eng.run()
+
+
+def test_debug_audit_runs_every_step():
+    """A shared-prefix + slot-refill + growth workload with
+    ``debug_audit=True``: the refcount auditor cross-checks the allocator
+    after every engine step, and the drained pool balances exactly."""
+    cfg = _cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (16, 9, 14))
+    prompts[2][:8] = prompts[0][:8]  # page-aligned shared prefix
+    eng = Engine(
+        cfg,
+        params,
+        EngineConfig(max_seqs=2, max_len=32, page_size=8, debug_audit=True),
+    )
+    for i, p in enumerate(prompts):
+        eng.submit(p, 8, rid=i, arrival_step=i)
+    reqs = eng.run()
+    assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
+    stats = eng.kv.audit()
+    assert stats.slot_held == 0
+    assert stats.free + stats.index_pinned == stats.total

@@ -71,14 +71,15 @@ def _idle_pages(kv):
     A drained engine must account for every page — with sharing on,
     finished prompts deliberately leave their full pages pinned in the
     prefix index (one index-owned reference each), so 'no leaks' means
-    free + index-pinned == total and no slot holds references."""
-    assert not kv._pages, f"slots still hold pages: {kv._pages}"
-    if kv.index is not None:
-        for node in kv.index._walk():
-            assert kv.allocator.refcount(node.page) == 1, (
-                f"index page {node.page} has stray references"
-            )
-    return kv.num_free_pages + kv.prefix_cache_pages
+    free + index-pinned == total and no slot holds references.  The full
+    refcount cross-check lives in the shared auditor
+    (:meth:`PagedKVCache.audit`); this helper only adds the drained-engine
+    requirement that no slot holds pages."""
+    stats = kv.audit()
+    assert stats.slot_held == 0 and not kv._pages, (
+        f"slots still hold pages: {kv._pages}"
+    )
+    return stats.free + stats.index_pinned
 
 
 def test_kvcache_page_size_derived_from_kernel_block():
@@ -834,6 +835,58 @@ def test_prefix_index_radix_unit():
     assert idx.evict_lru() == pages[0]
     assert idx.evict_lru() is None and idx.num_pages == 0
     assert a.num_free == 9
+
+
+def test_audit_balances_through_admission_lifecycle():
+    """The shared auditor tracks every accounting phase: cold admission
+    (slot-held), publication (index-pinned while slot-held), release
+    (index-pinned only), aliased re-admission, and full drain."""
+    cfg = _paged_cfg(block=4)
+    kv = PagedKVCache(cfg, PagedCacheConfig(max_seqs=2, max_len=16, num_pages=6))
+    assert dataclasses.astuple(kv.audit()) == (5, 5, 0, 0)  # (total, free, index_pinned, slot_held)
+    A = np.arange(8, dtype=np.int32)
+    kv.admit(0, A)
+    assert dataclasses.astuple(kv.audit()) == (5, 2, 0, 3)
+    kv.commit_prefix(0, A, 8)  # 2 full pages published; pins count as index
+    assert dataclasses.astuple(kv.audit()) == (5, 2, 2, 1)
+    kv.release(0)
+    assert dataclasses.astuple(kv.audit()) == (5, 3, 2, 0)
+    kv.admit(1, A)  # aliases both cached pages + 1 fresh tail page
+    assert dataclasses.astuple(kv.audit()) == (5, 2, 2, 1)
+    kv.release(1)
+    assert dataclasses.astuple(kv.audit()) == (5, 3, 2, 0)
+
+
+def test_audit_detects_refcount_corruption():
+    """The auditor must catch each way the accounting can break: a stray
+    extra reference, a leaked (vanished) reference, and a free-list /
+    refcount disagreement."""
+    cfg = _paged_cfg(block=4)
+
+    def fresh():
+        kv = PagedKVCache(
+            cfg, PagedCacheConfig(max_seqs=2, max_len=16, num_pages=6)
+        )
+        kv.admit(0, np.arange(8, dtype=np.int32))
+        kv.commit_prefix(0, np.arange(8, dtype=np.int32), 8)
+        return kv
+
+    kv = fresh()
+    kv.audit()  # sane before corruption
+    kv.allocator._ref[kv._pages[0][0]] += 1  # stray reference
+    with pytest.raises(AssertionError, match="refcount"):
+        kv.audit()
+
+    kv = fresh()
+    kv.allocator._ref[kv._pages[0][0]] -= 1  # leaked reference
+    with pytest.raises(AssertionError, match="refcount"):
+        kv.audit()
+
+    kv = fresh()
+    free_page = kv.allocator._free[-1]
+    kv.allocator._ref[free_page] = 1  # referenced page left on the free list
+    with pytest.raises(AssertionError, match="free-list|refcount"):
+        kv.audit()
 
 
 def test_kvcache_admission_aliases_cached_prefix():

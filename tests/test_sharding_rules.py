@@ -4,13 +4,12 @@ Uses AbstractMesh so the 512-way production meshes can be validated in the
 same process as the 1-device tests (jax locks the device count at init).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 import repro.configs as C
-from repro.configs.shapes import cache_specs, input_specs
+from repro.configs.shapes import cache_specs
 from repro.distributed import sharding as SH
 from repro.distributed.axes import abstract_mesh
 from repro.models import model as M

@@ -1,6 +1,5 @@
 """System behaviour: training loop, checkpoint/restart, elastic resharding,
 straggler hooks, serving engine, data determinism, grad compression."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ import repro.configs as C
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMData
 from repro.launch.mesh import make_local_mesh
-from repro.optim import OptConfig, adamw_init, adamw_update, wsd_schedule
+from repro.optim import OptConfig, adamw_init, wsd_schedule
 from repro.serve import ServeConfig, Server
 from repro.train import Trainer, TrainerConfig
 from repro.models import model as M
@@ -133,7 +132,9 @@ def test_microbatch_accumulation_matches_full_batch():
     opt = adamw_init(params, oc)
     data = SyntheticLMData(cfg, global_batch=8, seq_len=32)
     batch = data.batch(0)
-    lr = lambda s: 1e-3
+    def lr(s):
+        return 1e-3
+
     p1, _, m1 = jax.jit(make_train_step(cfg, oc, lr, accum_steps=1))(
         params, opt, batch
     )
