@@ -33,11 +33,16 @@ pool pages (the prefix is stored once, not once per request): those are
 the repo-level acceptance gates for shared-prefix serving.  Outputs must
 match between the two runs bit for bit.
 
+Every mode also merges its results (ratios, TTFT, tok/s, pool stats) into
+the ``BENCH_serve.json`` artifact (``--bench-out``; keyed ``mode:arch``)
+— the machine-readable perf trajectory CI uploads per run.
+
 Usage:  PYTHONPATH=src:. python benchmarks/serve_throughput.py [--arch ...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -55,6 +60,26 @@ from repro.serve import (
     make_requests,
     run_static_waves,
 )
+
+
+def _write_bench(args, mode: str, payload: dict) -> None:
+    """Merge one gate's results into the BENCH_serve.json perf artifact.
+
+    Keyed ``mode:arch`` so the three gates (and per-family runs) coexist in
+    one file; an existing artifact is updated in place, so a CI job running
+    several gates uploads a single trajectory document.
+    """
+    if not args.bench_out:
+        return
+    try:
+        with open(args.bench_out, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {}
+    doc[f"{mode}:{args.arch}"] = payload
+    with open(args.bench_out, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# bench artifact [{mode}:{args.arch}] -> {args.bench_out}")
 
 
 def _run_static(cfg, params, reqs, args, max_len):
@@ -96,9 +121,11 @@ def _run_continuous(cfg, params, reqs, args, max_len):
     stats = {
         "slot_steps": eng.decode_steps * args.max_seqs,
         "queue_steps": [r.stats.queue_steps for r in done],
+        "ttft_steps": [r.stats.ttft_steps for r in done],
         "preemptions": sum(r.stats.n_preemptions for r in done),
         "page_size": eng.kv.page_size,
         "cache_mb": eng.kv.cache_bytes() / 1e6,
+        "pool": eng.kv.pool_stats(),
     }
     return outs, wall, stats
 
@@ -205,6 +232,15 @@ def run_long_prompt(scale: float, args) -> float:
     print(f"# in-flight decode max stall during admission: chunked "
           f"{ch_stall * 1e3:.1f} ms vs one-shot {un_stall * 1e3:.1f} ms "
           f"(median paired ratio {ratio:.2f}, outputs match: {match})")
+    _write_bench(args, "long_prompt", {
+        "chunked_max_stall_ms": ch_stall * 1e3,
+        "oneshot_max_stall_ms": un_stall * 1e3,
+        "stall_ratio_median": ratio,
+        "pair_ratios": sorted(ratios),
+        "chunked_ttft_steps": c_ttft,
+        "oneshot_ttft_steps": u_ttft,
+        "outputs_match": match,
+    })
     return ratio
 
 
@@ -230,7 +266,7 @@ def _shared_prefix_trial(cfg, params, args, sharing: bool):
         prompt = np.concatenate([prefix, suffix]).astype(np.int32)
         reqs.append(eng.submit(prompt, args.max_new, rid=i, arrival_step=0))
     done = eng.run()
-    ttft = [r.stats.first_token_step - r.stats.arrival_step for r in done]
+    ttft = [r.stats.ttft_steps for r in done]
     outs = {r.rid: list(r.out_tokens) for r in done}
     return (
         float(np.mean(ttft)),
@@ -265,6 +301,14 @@ def run_shared_prefix(scale: float, args):
     print(f"# mean TTFT {sh_ttft:.1f} steps shared vs {un_ttft:.1f} unshared, "
           f"{saved} pool pages saved ({sh_pages} vs {un_pages} allocated), "
           f"outputs match: {match}")
+    _write_bench(args, "shared_prefix", {
+        "shared_ttft_steps": sh_ttft,
+        "unshared_ttft_steps": un_ttft,
+        "pages_saved": saved,
+        "pages_allocated": {"shared": sh_pages, "unshared": un_pages},
+        "cached_tokens": sh_cached,
+        "outputs_match": match,
+    })
     return sh_ttft, un_ttft, saved, match
 
 
@@ -293,6 +337,9 @@ def run(scale: float = 1.0, argv=None):
                          "sharing a multi-page prompt prefix, cache vs cold")
     ap.add_argument("--shared-prefix-pages", type=int, default=8,
                     help="pages of shared prompt prefix for --shared-prefix")
+    ap.add_argument("--bench-out", default="BENCH_serve.json",
+                    help="merge this run's results (keyed mode:arch) into "
+                         "this JSON perf artifact ('' disables)")
     args, _ = ap.parse_known_args(argv)
     if args.repeats < 1:
         ap.error("--repeats must be >= 1")
@@ -353,6 +400,23 @@ def run(scale: float = 1.0, argv=None):
     print(f"# continuous {ct_tps:.1f} tok/s vs static {st_tps:.1f} tok/s, "
           f"median paired speedup {speedup:.2f}x, "
           f"greedy outputs match: {match}")
+    _write_bench(args, "throughput", {
+        "speedup_median": speedup,
+        "pair_ratios": sorted(ratios),
+        "static_tok_s": st_tps,
+        "continuous_tok_s": ct_tps,
+        "slot_steps": {"static": st_slot_steps,
+                       "continuous": ct["slot_steps"]},
+        "efficiency": {"static": useful / st_slot_steps,
+                       "continuous": useful / ct["slot_steps"]},
+        "queue_steps": ct["queue_steps"],
+        "ttft_steps": ct["ttft_steps"],
+        "preemptions": ct["preemptions"],
+        "page_size": ct["page_size"],
+        "cache_mb": ct["cache_mb"],
+        "pool": ct["pool"],
+        "outputs_match": match,
+    })
     if not match:
         # at this (threaded-matmul) shape the two engines prefill at
         # different batch shapes, so XLA CPU may partition the contraction

@@ -24,6 +24,7 @@ frontend, which the adapter registry does not cover yet):
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -37,6 +38,7 @@ from repro.serve import (
     EngineConfig,
     ServeConfig,
     Server,
+    build_serve_report,
     frontend_extras,
     make_requests,
     run_static_waves,
@@ -93,6 +95,7 @@ def run_workload(cfg, params, args):
             prefill_chunks_per_step=args.prefill_chunks_per_step,
             prefix_sharing=not args.no_prefix_sharing,
             debug_audit=args.debug_audit,
+            obs=args.obs,
         ))
         for r in reqs:
             eng.submit(r["prompt"], r["max_new_tokens"],
@@ -100,39 +103,56 @@ def run_workload(cfg, params, args):
         t0 = time.time()
         done = eng.run()
         dt = time.time() - t0
-        mode = ("chunked prefill "
-                f"(chunk={eng.chunk_size} tok, "
-                f"budget={eng.tokens_per_step} tok/step)"
-                if eng.ec.chunked_prefill else "one-shot prefill")
-        print(f"[continuous]   {len(done)} requests, {useful} tokens in "
-              f"{dt:.2f}s -> {useful / dt:.1f} tok/s (incl. compile); "
-              f"page={eng.kv.page_size} pool={eng.kv.allocator.num_pages} "
-              f"cache={eng.kv.cache_bytes() / 1e6:.2f} MB, {mode}")
-        print("  rid arrive admit queue ttft_ms preempt cached  tok/s  n_tok")
-        for r in done:
-            s = r.stats
-            print(f"  {r.rid:3d} {s.arrival_step:6d} {s.admitted_step:5d} "
-                  f"{s.queue_steps:5d} {s.ttft_s * 1e3:7.1f} "
-                  f"{s.n_preemptions:7d} {s.cached_prompt_tokens:6d} "
-                  f"{s.decode_tok_s(len(r.out_tokens)):6.1f} "
-                  f"{len(r.out_tokens):6d}")
-        print(f"  engine steps={eng.step_count} decode_steps={eng.decode_steps} "
-              f"prefill_tokens={eng.prefill_tokens} "
-              f"prefill_chunks={eng.prefill_chunks}")
-        prompt_toks = sum(r.prompt_len for r in done)
-        cached = sum(r.stats.cached_prompt_tokens for r in done)
-        if eng.kv.sharing:
-            mode = ("compute-skipping" if eng.kv.skip_prefill
-                    else "memory-dedup, recompute")
-            print(f"  prefix cache [{mode}]: {cached}/{prompt_toks} prompt "
-                  f"tokens served from cache "
-                  f"({100.0 * cached / max(prompt_toks, 1):.1f}% hit rate), "
-                  f"{eng.kv.pages_aliased} page aliases, "
-                  f"{eng.kv.cow_copies} COW copies, "
-                  f"{eng.kv.prefix_cache_pages} pages resident")
-        else:
-            print("  prefix cache: off (family not shareable or "
-                  "--no-prefix-sharing)")
+        # one report, two renderings: the human table below prints straight
+        # from this dict, and --json-report dumps the same dict to disk
+        report = build_serve_report(eng, done, wall_s=dt, useful_tokens=useful)
+        print_continuous_report(eng, report)
+        if args.json_report:
+            with open(args.json_report, "w", encoding="utf-8") as f:
+                json.dump(report, f, indent=2)
+            print(f"  json report -> {args.json_report}")
+        if args.trace_out:
+            trace = eng.export_trace(args.trace_out)
+            print(f"  chrome trace -> {args.trace_out} "
+                  f"({len(trace['traceEvents'])} events; open in "
+                  f"ui.perfetto.dev or chrome://tracing)")
+
+
+def print_continuous_report(eng, report):
+    """Render the machine-readable serve report as the human table."""
+    e, pool, px, wl = (report["engine"], report["pool"],
+                       report["prefix_cache"], report["workload"])
+    mode = (f"chunked prefill (chunk={e['chunk_size']} tok, "
+            f"budget={e['prefill_tokens_per_step']} tok/step)"
+            if e["chunked_prefill"] else "one-shot prefill")
+    print(f"[continuous]   {wl['num_requests']} requests, "
+          f"{wl['useful_tokens']} tokens in "
+          f"{wl['wall_s']:.2f}s -> {wl['tok_s']:.1f} tok/s (incl. compile); "
+          f"page={pool['page_size']} pool={pool['pages_total'] + 1} "
+          f"cache={pool['cache_mb']:.2f} MB, {mode}")
+    print("  rid arrive admit queue ttft_ms preempt cached  tok/s  n_tok")
+    for r in report["requests"]:
+        tok_s = float("inf") if r["decode_tok_s"] is None else r["decode_tok_s"]
+        ttft_ms = float("nan") if r["ttft_ms"] is None else r["ttft_ms"]
+        print(f"  {r['rid']:3d} {r['arrival_step']:6d} {r['admitted_step']:5d} "
+              f"{r['queue_steps']:5d} {ttft_ms:7.1f} "
+              f"{r['preemptions']:7d} {r['cached_prompt_tokens']:6d} "
+              f"{tok_s:6.1f} {r['n_tokens']:6d}")
+    print(f"  engine steps={e['steps']} decode_steps={e['decode_steps']} "
+          f"prefill_tokens={e['prefill_tokens']} "
+          f"prefill_chunks={e['prefill_chunks']}")
+    if px["enabled"]:
+        label = (px["mode"] if px["mode"] == "compute-skipping"
+                 else "memory-dedup, recompute")
+        print(f"  prefix cache [{label}]: {px['cached_prompt_tokens']}"
+              f"/{px['prompt_tokens']} prompt tokens served from cache "
+              f"({100.0 * px['hit_rate']:.1f}% hit rate), "
+              f"{pool['pages_aliased_total']} page aliases, "
+              f"{pool['cow_copies_total']} COW copies, "
+              f"{pool['prefix_cache_pages']} pages resident")
+    else:
+        print("  prefix cache: off (family not shareable or "
+              "--no-prefix-sharing)")
 
 
 def main():
@@ -175,6 +195,20 @@ def main():
                     help="disable the shared-prefix page cache (radix "
                          "index + refcounted aliasing + copy-on-write); "
                          "stateful families disable it automatically")
+    ap.add_argument("--obs", action="store_true",
+                    help="deep observability: audit-backed pool gauges every "
+                         "step + jax.profiler.TraceAnnotation around the "
+                         "jitted decode/chunk steps (spans and counters are "
+                         "always recorded; this only deepens collection)")
+    ap.add_argument("--json-report", default="",
+                    help="write the latency/prefix-cache report (the table "
+                         "above, machine-readable, plus the full metrics "
+                         "registry snapshot) as JSON to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="export request-lifecycle spans and engine-step "
+                         "tracks as Chrome-trace JSON (open in "
+                         "ui.perfetto.dev); validate with "
+                         "`python -m repro.serve.obs PATH`")
     ap.add_argument("--debug-audit", action="store_true",
                     help="run the paged-KV refcount auditor after every "
                          "engine step (slow; catches page leaks / double "

@@ -21,22 +21,36 @@ from repro.serve.kvcache import (
     PagedKVCache,
     PrefixIndex,
 )
-from repro.serve.scheduler import Request, RequestStats, Scheduler
+from repro.serve.obs import (
+    MetricsRegistry,
+    Observability,
+    RequestStats,
+    RequestTimeline,
+    Span,
+    build_serve_report,
+    validate_chrome_trace,
+)
+from repro.serve.scheduler import Request, Scheduler
 
 __all__ = [
     "CacheAudit",
     "Engine",
     "EngineConfig",
+    "MetricsRegistry",
+    "Observability",
     "PageAllocator",
     "PagedCacheConfig",
     "PagedKVCache",
     "PrefixIndex",
     "Request",
     "RequestStats",
+    "RequestTimeline",
     "Scheduler",
     "ServeConfig",
     "Server",
+    "Span",
     "bucket_tokens",
+    "build_serve_report",
     "frontend_extras",
     "make_requests",
     "prefix_compute_skippable",
@@ -44,4 +58,5 @@ __all__ = [
     "run_static_waves",
     "supported_families",
     "unsupported_reason",
+    "validate_chrome_trace",
 ]

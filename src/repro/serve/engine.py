@@ -44,9 +44,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import time
 import warnings
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +57,7 @@ from repro.models import adapters as A
 from repro.models import model as M
 from repro.models.model import frontend_extras  # re-exported for callers
 from repro.serve.kvcache import PagedCacheConfig, PagedKVCache
+from repro.serve.obs import Observability
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -273,6 +273,13 @@ class EngineConfig:
     # debugging aid: cross-checks allocator refcounts against slot page
     # tables and the prefix index — free + index-pinned + slot-held == total)
     debug_audit: bool = False
+    # deep observability: spans/counters/cheap gauges are always on (host
+    # int bookkeeping at scheduling events — cannot change outputs); this
+    # additionally runs the pool audit every step for the
+    # free/index_pinned/slot_held gauge split and wraps the jitted
+    # decode/chunk dispatches in jax.profiler.TraceAnnotation so device
+    # traces line up with the host spans
+    obs: bool = False
 
 
 _DEFAULT_CHUNKS_PER_STEP = 4  # the alias's historical default
@@ -316,7 +323,8 @@ class Engine:
             page_size=ec.page_size, num_pages=ec.num_pages,
             prefix_sharing=sharing,
         ))
-        self.sched = Scheduler(self.kv, ec.max_seqs)
+        self.obs = Observability(deep=ec.obs, max_seqs=ec.max_seqs)
+        self.sched = Scheduler(self.kv, ec.max_seqs, obs=self.obs)
         self.chunk_size = self._resolve_chunk(ec.prefill_chunk)
         if ec.prefill_tokens_per_step < 0:
             raise ValueError("prefill_tokens_per_step must be >= 0")
@@ -417,11 +425,10 @@ class Engine:
         )
 
     def _append_token(self, slot: int, req: Request, tok: int) -> None:
+        # the first-token milestone is recorded by obs.prefill_complete
+        # (callers fire it right before sampling the first token)
         req.out_tokens.append(tok)
         self._last_tok = self._last_tok.at[slot].set(tok)
-        if req.stats.first_token_step < 0:
-            req.stats.first_token_step = self.step_count
-            req.stats.t_first_token = time.perf_counter()
         if req.done or (self.ec.eos_id is not None and tok == self.ec.eos_id):
             self.sched.finish(slot, self.step_count)
 
@@ -505,18 +512,25 @@ class Engine:
         toks = np.zeros((1, n_pad), np.int32)
         toks[0, :n] = prompt[off : off + n]
         phys_tok, off_tok = self.kv.token_targets(slot, off, n_pad)
-        logits, self.kv.data = self._chunk_fn(
-            self.params, self.kv.data, jnp.asarray(toks), jnp.int32(slot),
-            jnp.int32(off), phys_tok, off_tok, self.kv.table_row(slot),
-            jnp.int32(n - 1),
-        )
+        self.obs.chunk_begin(req, self.step_count, off, n)
+        with self.obs.device_span("prefill_chunk"):
+            logits, self.kv.data = self._chunk_fn(
+                self.params, self.kv.data, jnp.asarray(toks), jnp.int32(slot),
+                jnp.int32(off), phys_tok, off_tok, self.kv.table_row(slot),
+                jnp.int32(n - 1),
+            )
         req.prefill_pos += n
         self.prefill_tokens += n
         self.prefill_chunks += 1
+        self.obs.chunk_end(req, self.step_count)
         # publish newly completed full pages: from here on, prompts sharing
         # this prefix alias these pages instead of recomputing them
         self.kv.commit_prefix(slot, prompt, req.prefill_pos)
         if not req.prefilling:  # final chunk: sample the first token
+            # close the prefill span / open decode BEFORE sampling: with
+            # max_new == 1 the sampled token finishes the request, and
+            # finish must close an already-open decode span
+            self.obs.prefill_complete(req, self.step_count)
             self._append_token(slot, req, self._sample(logits[0, -1], req))
         return n
 
@@ -532,18 +546,23 @@ class Engine:
             Sp = min(bucket_tokens(S, self.kv.page_size), self.kv.max_len)
             toks = np.zeros((1, Sp), np.int32)
             toks[0, :S] = prompt
-            logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks), **extras},
-                jnp.int32(S - 1),
-            )
+            with self.obs.device_span("prefill_full"):
+                logits, caches = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks), **extras},
+                    jnp.int32(S - 1),
+                )
         else:
-            logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(prompt)[None], **extras}
-            )
+            with self.obs.device_span("prefill_full"):
+                logits, caches = self._prefill(
+                    self.params, {"tokens": jnp.asarray(prompt)[None], **extras}
+                )
         self.kv.install_prefill(slot, caches)
         req.prefill_pos = req.prefill_target
         self.prefill_tokens += S
         self.kv.commit_prefix(slot, prompt, S)
+        # span ordering as in _prefill_one_chunk: decode must be open
+        # before a max_new == 1 request finishes inside _append_token
+        self.obs.prefill_complete(req, self.step_count)
         self._append_token(slot, req, self._sample(logits[0, -1], req))
 
     # -- engine steps -------------------------------------------------------
@@ -586,6 +605,7 @@ class Engine:
             self._flush_pending()
         self.sched.grow_for_decode(self.step_count)
         decoding = self.sched.decoding
+        self.obs.decode_batch(len(decoding))
         if not decoding:
             return
         seq_pos = np.zeros((self.ec.max_seqs,), np.int32)  # idle slots -> 0
@@ -593,10 +613,11 @@ class Engine:
         for slot, req in decoding:
             seq_pos[slot] = req.next_pos
             active[slot] = True
-        greedy, logits, self.kv.data = self._decode(
-            self.params, self.kv.data, self._last_tok[:, None],
-            jnp.asarray(seq_pos), self.kv.page_table(), jnp.asarray(active),
-        )
+        with self.obs.device_span("decode_step"):
+            greedy, logits, self.kv.data = self._decode(
+                self.params, self.kv.data, self._last_tok[:, None],
+                jnp.asarray(seq_pos), self.kv.page_table(), jnp.asarray(active),
+            )
         self.decode_steps += 1
         if self.ec.temperature > 0:
             # host sampling needs the logits now — no deferral on this path
@@ -623,12 +644,15 @@ class Engine:
 
     def step(self) -> None:  # repro: hot-loop
         """One engine iteration: arrivals -> admissions (prefill) -> decode."""
+        t0 = self.obs.step_begin()
         self.sched.poll_arrivals(self.step_count)
         self._admit_and_prefill()
         self._decode_once()
         self.step_count += 1
-        if self.ec.debug_audit:
-            self.kv.audit()
+        audit = None
+        if self.ec.debug_audit or self.obs.deep:
+            audit = self.kv.audit()
+        self.obs.step_end(self, t0, audit)
 
     def run(self, max_steps: int = 1_000_000) -> List[Request]:
         """Drive until every submitted request finishes; returns the
@@ -648,6 +672,15 @@ class Engine:
         ]
 
     # -- convenience --------------------------------------------------------
+
+    def metrics(self) -> Dict[str, Any]:
+        """JSON-ready snapshot of the engine's metrics registry."""
+        return self.obs.registry.snapshot()
+
+    def export_trace(self, path: str) -> Dict[str, Any]:
+        """Write the recorded spans as Chrome-trace JSON (Perfetto-loadable)
+        to ``path``; returns the trace object."""
+        return self.obs.export_chrome_trace(path)
 
     def generate(self, batch: Dict, max_new_tokens: int = 32) -> np.ndarray:
         """Drop-in for Server.generate: all prompts arrive at step 0.

@@ -405,6 +405,19 @@ class PagedKVCache:
         """Physical pages currently pinned by the prefix index."""
         return self.index.num_pages if self.index else 0
 
+    def pool_stats(self) -> Dict[str, int]:  # repro: hot-loop
+        """O(1) host-int pool stats, cheap enough for every engine step
+        (the per-page ``free + index_pinned + slot_held == total`` split
+        needs the :meth:`audit` walk and is deep-observability only)."""
+        return {
+            "pages_total": self.allocator.num_pages - 1,  # excl. null page
+            "pages_free": self.allocator.num_free,
+            "prefix_cache_pages": self.prefix_cache_pages,
+            "pages_aliased_total": self.pages_aliased,
+            "cow_copies_total": self.cow_copies,
+            "pages_allocated_total": self.allocator.pages_allocated,
+        }
+
     def _lookup(self, prompt) -> Tuple[List[int], int, int]:
         """(cached prefix pages, matched tokens, prompt length).  ``prompt``
         may be a bare length (no sharing — the unit-test/legacy form) or

@@ -16,55 +16,29 @@ the :class:`~repro.serve.kvcache.PagedKVCache` owns pages.  Policy:
 * **Slot re-fill**: a finished or preempted request frees its slot the same
   step; the next admission can land in it immediately.
 
-Per-request stats (queue steps, TTFT, decode tok/s) accumulate on the
-:class:`Request` so the launch driver and benchmarks can report latency
-percentiles without instrumenting the engine.
+Request lifecycle is recorded as spans/milestones on each request's
+:class:`~repro.serve.obs.RequestTimeline` at these scheduling events, and
+``Request.stats`` (queue steps, TTFT, decode tok/s) is a derived
+:class:`~repro.serve.obs.RequestStats` view over that single record — the
+launch driver and benchmarks report latency without instrumenting the
+engine.  Wall times are recorded at bookkeeping time: with the engine's
+deferred host sync the device may still be draining enqueued steps, so
+per-request ``decode_tok_s`` measures enqueue rate; workload-level
+tokens/s (useful tokens / engine wall) is the throughput headline.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-
-@dataclasses.dataclass
-class RequestStats:
-    """Step- and wall-clock timings for one request.
-
-    Wall times are recorded at bookkeeping time: with the engine's deferred
-    host sync the device may still be draining enqueued steps, so per-request
-    ``decode_tok_s`` measures enqueue rate; workload-level tokens/s (useful
-    tokens / engine wall) is the throughput headline.
-    """
-
-    arrival_step: int = 0
-    admitted_step: int = -1
-    first_token_step: int = -1
-    finish_step: int = -1
-    t_arrival: float = 0.0
-    t_admitted: float = 0.0
-    t_first_token: float = 0.0
-    t_finish: float = 0.0
-    n_preemptions: int = 0
-    # prompt tokens served from the shared prefix cache at the latest
-    # admission (page-aliased instead of recomputed-and-stored); feeds the
-    # launch driver's per-run prefix hit-rate line
-    cached_prompt_tokens: int = 0
-
-    @property
-    def queue_steps(self) -> int:
-        return self.admitted_step - self.arrival_step
-
-    @property
-    def ttft_s(self) -> float:
-        return self.t_first_token - self.t_arrival
-
-    def decode_tok_s(self, n_generated: int) -> float:
-        dt = self.t_finish - self.t_first_token
-        return (n_generated - 1) / dt if dt > 0 and n_generated > 1 else float("inf")
+from repro.serve.obs import (  # noqa: F401  (RequestStats re-exported)
+    Observability,
+    RequestStats,
+    RequestTimeline,
+)
 
 
 @dataclasses.dataclass
@@ -91,7 +65,13 @@ class Request:
     # preemption — a re-admitted request re-prefills from scratch.
     prefill_pos: int = 0
     prefill_target: int = 0
-    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
+    # span/milestone record written at scheduling events; ``stats`` below is
+    # the derived numeric view (step AND wall TTFT from the same milestones)
+    timeline: RequestTimeline = dataclasses.field(default_factory=RequestTimeline)
+
+    @property
+    def stats(self) -> RequestStats:
+        return RequestStats(self.timeline)
 
     @property
     def prompt_len(self) -> int:
@@ -133,9 +113,12 @@ class Request:
 class Scheduler:
     """Drives request state against the paged cache's page budget."""
 
-    def __init__(self, kv, max_seqs: int):
+    def __init__(self, kv, max_seqs: int, obs: Optional[Observability] = None):
         self.kv = kv
         self.max_seqs = max_seqs
+        # lifecycle events are recorded here; a standalone scheduler gets a
+        # private lightweight recorder, the Engine passes its own
+        self.obs = obs if obs is not None else Observability(max_seqs=max_seqs)
         self.pending: List[Request] = []  # not yet arrived (simulated clock)
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_seqs
@@ -162,14 +145,12 @@ class Scheduler:
         self.pending.append(req)
         self.pending.sort(key=lambda r: (r.arrival_step, r.rid))
 
-    def poll_arrivals(self, step: int) -> None:
+    def poll_arrivals(self, step: int) -> None:  # repro: hot-loop
         """Move requests whose simulated arrival step has come into the queue."""
-        now = time.perf_counter()
         while self.pending and self.pending[0].arrival_step <= step:
             req = self.pending.pop(0)
             req.state = "waiting"
-            req.stats.arrival_step = req.arrival_step
-            req.stats.t_arrival = now
+            self.obs.request_queued(req, req.arrival_step)
             self.queue.append(req)
 
     # -- admission ----------------------------------------------------------
@@ -203,11 +184,7 @@ class Scheduler:
                 min(matched, req.prefill_target - 1)
                 if self.kv.skip_prefill else 0
             )
-            req.stats.cached_prompt_tokens = matched
-            now = time.perf_counter()
-            if req.stats.admitted_step < 0:
-                req.stats.admitted_step = step
-                req.stats.t_admitted = now
+            self.obs.request_admitted(req, step, matched, req.prefill_target)
             admitted.append((slot, req))
         return admitted
 
@@ -249,7 +226,7 @@ class Scheduler:
         # preempted prefill already published to the prefix index let the
         # next admission resume at the first uncached page boundary
         req.prefill_pos = 0
-        req.stats.n_preemptions += 1
+        self.obs.request_preempted(req, step)
         self.queue.appendleft(req)  # preempted requests resume first
         return req
 
@@ -262,8 +239,7 @@ class Scheduler:
         self.slots[slot] = None
         self._admit_order.remove(slot)
         req.state = "finished"
-        req.stats.finish_step = step
-        req.stats.t_finish = time.perf_counter()
+        self.obs.request_finished(req, step)
         self.finished[req.rid] = req
         return req
 

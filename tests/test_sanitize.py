@@ -138,6 +138,36 @@ def test_engine_retrace_budget(retrace_budget):
     eng.run()
 
 
+def test_obs_enabled_engine_under_transfer_guard():
+    """Deep observability adds NO hot-loop host syncs: the obs=True engine
+    runs with its jitted steps transfer-guarded (recording is host-int
+    bookkeeping at existing sync points) and its greedy outputs match the
+    gated-off engine bit for bit."""
+    cfg = _cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (12, 9, 14))
+    ref = Engine(cfg, params, EngineConfig(max_seqs=2, max_len=32, page_size=8))
+    for i, p in enumerate(prompts):
+        ref.submit(p, 8, rid=i, arrival_step=i)
+    ref_out = [np.asarray(r.out_tokens) for r in ref.run()]
+
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=32, page_size=8, obs=True,
+    ))
+    eng._decode = _guarded(eng._decode)
+    eng._chunk_fn = _guarded(eng._chunk_fn)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 8, rid=i, arrival_step=i)
+    reqs = eng.run()
+    for r, b in zip(reqs, ref_out):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+    # deep collection really ran: per-step audit gauges + engine-step spans
+    g = eng.metrics()["gauges"]
+    assert g["pages_free"] + g["pages_index_pinned"] == g["pages_total"]
+    assert len(eng.obs.step_spans) == eng.step_count
+    assert all(r.timeline.open_spans == [] for r in reqs)
+
+
 def test_debug_audit_runs_every_step():
     """A shared-prefix + slot-refill + growth workload with
     ``debug_audit=True``: the refcount auditor cross-checks the allocator
