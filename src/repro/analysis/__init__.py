@@ -1,3 +1,5 @@
 """Analysis tools: the paper's analytic cost model (:mod:`analytic`), the
-roofline sweep (:mod:`roofline`), and the repo-specific static lint pass +
-runtime sanitizer harness (:mod:`staticcheck`)."""
+roofline sweep (:mod:`roofline`), the repo-specific static lint pass +
+runtime sanitizer harness (:mod:`staticcheck`), the shared AOT
+lower/compile machinery (:mod:`aot`), and the compiled-artifact linter
+over the serving engine's jitted steps (:mod:`jaxcheck`)."""

@@ -1,0 +1,100 @@
+"""Shared AOT lower/compile machinery for compiled-artifact analysis.
+
+``jax.jit(fn).lower(*args).compile()`` is the repo's standard way of turning
+a step function into an inspectable artifact without executing it: the
+multi-pod dry-run (:mod:`repro.launch.dryrun`) proves sharding configs
+compile and records their memory/cost analyses, and the compiled-artifact
+linter (:mod:`repro.analysis.jaxcheck`) statically checks the serving
+engine's hot steps.  This module is the one place that machinery lives.
+
+Arguments may be real arrays or :class:`jax.ShapeDtypeStruct` pytrees —
+lowering never runs the computation either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+#: ``CompiledMemoryStats`` fields recorded by :func:`memory_record` — the
+#: exact set (and order) the dry-run has always persisted per cell.
+MEMORY_FIELDS = (
+    "temp_size_in_bytes",
+    "argument_size_in_bytes",
+    "output_size_in_bytes",
+    "alias_size_in_bytes",
+    "generated_code_size_in_bytes",
+)
+
+
+@dataclasses.dataclass
+class AotArtifact:
+    """One step function lowered and compiled ahead of time."""
+
+    jitted: Any
+    lowered: Any
+    compiled: Any
+    lower_s: float
+    compile_s: float
+
+    def memory_record(self) -> Dict[str, int]:
+        return memory_record(self.compiled)
+
+    def cost_analysis(self) -> Optional[Dict[str, float]]:
+        return self.compiled.cost_analysis()
+
+    def hlo_text(self) -> str:
+        return self.compiled.as_text()
+
+
+def lower_and_compile(
+    fn,
+    args: Sequence,
+    *,
+    in_shardings: Any = None,
+    out_shardings: Any = None,
+    donate_argnums: Tuple[int, ...] = (),
+    keep_unused: bool = False,
+    static_argnums: Tuple[int, ...] = (),
+) -> AotArtifact:
+    """Jit, lower, and compile ``fn`` on ``args``; never executes.
+
+    ``keep_unused=True`` keeps every argument leaf as an executable
+    parameter (jit prunes unused ones by default) — required when the
+    caller maps flattened argument indices onto HLO parameter numbers
+    (the donation-effectiveness check in jaxcheck).
+    """
+    kwargs: Dict[str, Any] = {}
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    if keep_unused:
+        kwargs["keep_unused"] = True
+    if static_argnums:
+        kwargs["static_argnums"] = static_argnums
+    jitted = jax.jit(fn, donate_argnums=donate_argnums, **kwargs)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    return AotArtifact(
+        jitted=jitted,
+        lowered=lowered,
+        compiled=compiled,
+        lower_s=t_lower,
+        compile_s=t_compile,
+    )
+
+
+def memory_record(compiled) -> Dict[str, int]:
+    """``compiled.memory_analysis()`` as a plain int dict (MEMORY_FIELDS
+    present on this backend only — XLA:CPU reports all five)."""
+    mem = compiled.memory_analysis()
+    return {
+        k: int(getattr(mem, k)) for k in MEMORY_FIELDS if hasattr(mem, k)
+    }

@@ -1,0 +1,217 @@
+"""repro.analysis.jaxcheck — static analysis over *compiled* serving steps.
+
+:mod:`repro.analysis.staticcheck` lints Python source; the hazards that
+matter for the serving hot path live one level down, in the lowered jaxprs
+and compiled executables of the engine's jitted steps: a donation can
+silently fall back to a copy, a paged-decode gather can materialize the
+full K/V in HBM, an upcast can creep into a hot step, a code change can
+leak new jit-cache signatures, and the compiled memory footprint can
+regress — all invisible to source-level lint and only *felt* as a slow
+perf regression.  This package AOT-compiles the engine's jitted-step
+inventory (:func:`repro.serve.engine.jitted_step_fns`, lowered via
+:mod:`repro.analysis.aot` — the same ``lower().compile()`` machinery the
+multi-pod dry-run uses) and proves the data-movement claims statically:
+
+===========  ==================================================================
+rule id      what it catches
+===========  ==================================================================
+``RPJ101``   donation-effectiveness: a buffer passed at a ``donate_argnums``
+             position whose executable does **not** alias it to an output
+             (``input_output_alias``) — the donation silently became a copy
+``RPJ102``   materialized-gather: a ``gather`` op in the lowered jaxpr whose
+             output bytes exceed the step's budget — the "full K/V gathered
+             into HBM" hazard the paged kernels exist to avoid
+``RPJ103``   dtype-promotion drift: ``convert_element_type`` introducing an
+             upcast wider than the planned widest dtype inside a hot step
+``RPJ104``   retrace-closure: a chunk shape escaping the statically
+             enumerated jit-cache key set, or probe calls compiling more
+             cache entries than the declared signature count
+``RPJ105``   memory-budget regression: ``compiled.memory_analysis()``
+             temp/argument/output bytes over the checked-in budget
+===========  ==================================================================
+
+Budgets and waivers live in the checked-in ``jaxcheck.budgets`` file
+(re-baseline with ``--write-budgets``); a step section may waive rules with
+``waive = RPJ103 -- reason`` — the compiled-artifact twin of staticcheck's
+``# repro: noqa`` pragmas.
+
+CLI::
+
+    python -m repro.analysis.jaxcheck --json-out BENCH_jaxcheck.json
+
+Exit 0 when clean (modulo budgets/waivers), 1 on findings, 2 on usage
+errors.  CPU-runnable: lowering and ``memory_analysis`` never execute the
+steps; only the RPJ104 signature probes run (smoke-sized, tiny on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "Budgets",
+    "RULE_IDS",
+    "RULE_DOCS",
+    "load_budgets",
+    "format_budgets",
+]
+
+RULE_IDS = ("RPJ101", "RPJ102", "RPJ103", "RPJ104", "RPJ105")
+
+RULE_DOCS = {
+    "RPJ101": "donation-effectiveness: donated buffer not in input_output_aliases",
+    "RPJ102": "materialized-gather: gather output bytes over the step's budget",
+    "RPJ103": "dtype-promotion drift: upcast past the planned widest dtype",
+    "RPJ104": "retrace-closure: jit signature outside the enumerated key set",
+    "RPJ105": "memory-budget regression: compiled memory over checked-in budget",
+}
+
+#: memory_analysis fields gated by RPJ105 (alias/codegen sizes are recorded
+#: in the report but not gated — they track the other three)
+GATED_MEMORY_FIELDS = (
+    "temp_size_in_bytes",
+    "argument_size_in_bytes",
+    "output_size_in_bytes",
+)
+
+DEFAULT_TOLERANCE = 0.5  # compiled sizes may wobble across jaxlib builds
+DEFAULT_WIDEST = "float32"  # the planned widest compute dtype in hot steps
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One compiled-artifact finding, reported as ``step: RULE message``."""
+
+    rule: str
+    step: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.step}: {self.rule} {self.message}"
+
+    def to_json(self) -> Dict[str, str]:
+        return {"rule": self.rule, "step": self.step, "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# Budgets file (jaxcheck.budgets)
+# ---------------------------------------------------------------------------
+#
+#   [global]
+#   tolerance = 0.50
+#   allowed_widest = float32
+#
+#   [decode_step]
+#   temp_size_in_bytes = 1234
+#   argument_size_in_bytes = 5678
+#   output_size_in_bytes = 91011
+#   max_gather_bytes = 1213
+#   waive = RPJ103 -- reason
+#
+# Sections are step names from the AOT inventory; `waive` suppresses rules
+# for that step (or globally, in [global]).  Regenerate measured values
+# with `python -m repro.analysis.jaxcheck --write-budgets`.
+
+
+@dataclasses.dataclass
+class Budgets:
+    """Parsed ``jaxcheck.budgets``: per-step numeric budgets + waivers."""
+
+    steps: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    waivers: Dict[str, Set[str]] = dataclasses.field(default_factory=dict)
+    tolerance: float = DEFAULT_TOLERANCE
+    allowed_widest: str = DEFAULT_WIDEST
+
+    def budget(self, step: str, key: str) -> Optional[int]:
+        return self.steps.get(step, {}).get(key)
+
+    def waived(self, rule: str, step: str) -> bool:
+        return rule in self.waivers.get(step, set()) or (
+            rule in self.waivers.get("global", set())
+        )
+
+    def allowed(self, step: str, key: str, value: int) -> bool:
+        """Within budget: ``value <= budget * (1 + tolerance)``."""
+        b = self.budget(step, key)
+        if b is None:
+            return False
+        return value <= b * (1.0 + self.tolerance)
+
+
+def _parse_waive(value: str, where: str) -> Set[str]:
+    rules_part = value.split("--", 1)[0]
+    rules = {t.strip() for t in rules_part.split(",") if t.strip()}
+    unknown = rules - set(RULE_IDS)
+    if unknown:
+        raise ValueError(f"{where}: unknown rule id(s) in waive: {sorted(unknown)}")
+    if not rules:
+        raise ValueError(f"{where}: empty waive entry")
+    return rules
+
+
+def load_budgets(path: Path) -> Budgets:
+    budgets = Budgets()
+    section = None
+    for lineno, raw in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        where = f"{path}:{lineno}"
+        if line.startswith("[") and line.endswith("]"):
+            section = line[1:-1].strip()
+            if not section:
+                raise ValueError(f"{where}: empty section name")
+            continue
+        if "=" not in line or section is None:
+            raise ValueError(f"{where}: expected `key = value` inside a section")
+        key, value = (t.strip() for t in line.split("=", 1))
+        if key == "waive":
+            budgets.waivers.setdefault(section, set()).update(
+                _parse_waive(value, where)
+            )
+        elif section == "global" and key == "tolerance":
+            budgets.tolerance = float(value)
+        elif section == "global" and key == "allowed_widest":
+            budgets.allowed_widest = value
+        else:
+            try:
+                budgets.steps.setdefault(section, {})[key] = int(value)
+            except ValueError:
+                raise ValueError(
+                    f"{where}: budget value for {key} must be an int"
+                ) from None
+    return budgets
+
+
+def format_budgets(
+    measured: Dict[str, Dict[str, int]],
+    *,
+    tolerance: float = DEFAULT_TOLERANCE,
+    allowed_widest: str = DEFAULT_WIDEST,
+    waivers: Optional[Dict[str, Set[str]]] = None,
+) -> str:
+    """Serialize measured per-step budgets (preserving waivers on rewrite)."""
+    lines = [
+        "# jaxcheck.budgets — compiled-artifact budgets for the serving",
+        "# engine's jitted steps (gather bytes, memory_analysis sizes).",
+        "# Regenerate with: python -m repro.analysis.jaxcheck --write-budgets",
+        "# `waive = RPJxxx -- reason` suppresses a rule for a step.",
+        "",
+        "[global]",
+        f"tolerance = {tolerance:.2f}",
+        f"allowed_widest = {allowed_widest}",
+    ]
+    waivers = waivers or {}
+    if "global" in waivers:
+        lines.append(f"waive = {', '.join(sorted(waivers['global']))}")
+    for step in sorted(measured):
+        lines.append("")
+        lines.append(f"[{step}]")
+        for key in sorted(measured[step]):
+            lines.append(f"{key} = {measured[step][key]}")
+        if step in waivers:
+            lines.append(f"waive = {', '.join(sorted(waivers[step]))}")
+    return "\n".join(lines) + "\n"

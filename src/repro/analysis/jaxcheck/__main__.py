@@ -1,0 +1,130 @@
+# repro: noqa-file RPR005 -- CLI driver: the findings prints ARE the output
+"""CLI: ``python -m repro.analysis.jaxcheck``.
+
+Compiles the serving engine's jitted-step inventory ahead of time and runs
+the RPJ rules against the artifacts.  Exit 0 when clean (modulo the
+checked-in ``jaxcheck.budgets``), 1 on findings, 2 on usage errors.
+
+  # check the tree against the checked-in budgets
+  PYTHONPATH=src python -m repro.analysis.jaxcheck
+
+  # re-baseline after an intentional memory/gather change
+  PYTHONPATH=src python -m repro.analysis.jaxcheck --write-budgets
+
+  # CI report artifact
+  PYTHONPATH=src python -m repro.analysis.jaxcheck --json-out BENCH_jaxcheck.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.jaxcheck import (
+    DEFAULT_TOLERANCE,
+    DEFAULT_WIDEST,
+    RULE_DOCS,
+    RULE_IDS,
+    Budgets,
+    format_budgets,
+    load_budgets,
+)
+from repro.analysis.jaxcheck.harness import compile_step, measure
+from repro.analysis.jaxcheck.inventory import InventoryConfig, serving_inventory
+from repro.analysis.jaxcheck.rules import run_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.jaxcheck",
+        description="static analysis over the engine's compiled jitted steps",
+    )
+    ap.add_argument("--arch", default="minicpm-2b",
+                    help="model config to compile the inventory at")
+    ap.add_argument("--max-seqs", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--budgets", default="jaxcheck.budgets",
+                    help="budgets/waivers file (default: ./jaxcheck.budgets)")
+    ap.add_argument("--write-budgets", action="store_true",
+                    help="measure and (re)write the budgets file, keep waivers")
+    ap.add_argument("--select", nargs="+", choices=RULE_IDS, default=None,
+                    help="run only these rules")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json-out", default=None,
+                    help="write a JSON report (BENCH_jaxcheck.json in CI)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in RULE_IDS:
+            print(f"{rid}  {RULE_DOCS[rid]}")
+        return 0
+
+    geometry = InventoryConfig(
+        arch=args.arch, max_seqs=args.max_seqs, max_len=args.max_len,
+        page_size=args.page_size,
+    )
+    inv = serving_inventory(geometry)
+    steps = [compile_step(spec) for spec in inv.specs]
+    measured = {cs.name: measure(cs) for cs in steps}
+    budgets_path = Path(args.budgets)
+
+    if args.write_budgets:
+        tolerance, widest, waivers = DEFAULT_TOLERANCE, DEFAULT_WIDEST, None
+        if budgets_path.exists():  # keep waivers + global knobs on rewrite
+            old = load_budgets(budgets_path)
+            tolerance, widest, waivers = (
+                old.tolerance, old.allowed_widest, old.waivers
+            )
+        budgets_path.write_text(format_budgets(
+            measured, tolerance=tolerance, allowed_widest=widest,
+            waivers=waivers,
+        ), encoding="utf-8")
+        print(f"wrote {budgets_path} ({len(measured)} steps)")
+        return 0
+
+    if budgets_path.exists():
+        try:
+            budgets = load_budgets(budgets_path)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    else:
+        print(f"note: {budgets_path} not found — RPJ102/RPJ105 will report "
+              f"unbudgeted steps; run --write-budgets to baseline",
+              file=sys.stderr)
+        budgets = Budgets()
+
+    findings = run_rules(steps, inv, budgets, select=args.select)
+    for f in findings:
+        print(f.format())
+
+    if args.json_out:
+        report = {
+            "tool": "jaxcheck",
+            "arch": args.arch,
+            "geometry": {
+                "max_seqs": args.max_seqs, "max_len": args.max_len,
+                "page_size": args.page_size,
+            },
+            "chunk_size": inv.chunk_size,
+            "chunk_closure": list(inv.chunk_closure),
+            "n_steps": len(steps),
+            "steps": measured,
+            "findings": [f.to_json() for f in findings],
+            "status": "findings" if findings else "clean",
+        }
+        Path(args.json_out).write_text(
+            json.dumps(report, indent=2) + "\n", encoding="utf-8"
+        )
+
+    n = len(findings)
+    print(f"jaxcheck: {len(steps)} compiled steps, "
+          f"{n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,218 @@
+"""AOT harness: turn step specs into inspectable compiled artifacts.
+
+A :class:`StepSpec` names one jitted hot-path step (un-jitted callable +
+abstract example arguments + donate positions, plus the optional RPJ104
+signature-probe declaration); :func:`compile_step` lowers and compiles it
+through the shared machinery in :mod:`repro.analysis.aot` and extracts the
+facts the rules consume:
+
+* the closed jaxpr (recursively walkable — gathers and converts hide
+  inside nested ``pjit``/``scan``/``cond`` sub-jaxprs),
+* the executable's ``input_output_alias`` parameter set, mapped against
+  the flattened donated-argument leaves (``keep_unused=True`` keeps the
+  flat-index -> HLO-parameter-number mapping the identity),
+* the ``memory_analysis()`` record.
+
+Nothing here executes a step; only the RPJ104 probe driver
+(:func:`rules.rule_rpj104`) runs real (smoke-sized) calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.aot import AotArtifact, lower_and_compile
+
+
+@dataclasses.dataclass
+class ProbeSet:
+    """RPJ104 signature probes: real-argument factories driven through a
+    fresh jit whose compiled-entry count must land on ``expected_entries``.
+
+    ``keys`` may intentionally repeat a signature (two calls that must
+    share one trace); ``make_args(key)`` must return *fresh* buffers every
+    call — donated arguments are consumed."""
+
+    keys: Sequence[Any]
+    make_args: Callable[[Any], tuple]
+    expected_entries: int
+
+
+@dataclasses.dataclass
+class StepSpec:
+    """One jitted hot-path step, declared for AOT analysis."""
+
+    name: str
+    fn: Callable
+    args: tuple  # pytrees of jax.ShapeDtypeStruct (or real arrays)
+    donate_argnums: Tuple[int, ...] = ()
+    probe: Optional[ProbeSet] = None
+    #: RPJ104 static closure: the signature keys admission is planned to
+    #: emit, and the closed set they must stay inside
+    signature_plan: Optional[Sequence[Any]] = None
+    signature_closure: Optional[Sequence[Any]] = None
+
+
+@dataclasses.dataclass
+class CompiledStep:
+    """A step spec plus everything the rules read off its artifacts."""
+
+    spec: StepSpec
+    artifact: AotArtifact
+    jaxpr: Any  # ClosedJaxpr
+    donated_params: FrozenSet[int]  # flat arg indices asked to donate
+    aliased_params: FrozenSet[int]  # HLO parameter numbers actually aliased
+    donated_leaf_labels: Dict[int, str]  # flat index -> human label
+    memory: Dict[str, int]
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """Depth-first over every eqn of a (Closed)Jaxpr, including the
+    sub-jaxprs of pjit / scan / while / cond / custom-derivative calls."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(val) -> List[Any]:
+    if hasattr(val, "jaxpr") or hasattr(val, "eqns"):
+        return [val]
+    if isinstance(val, (list, tuple)):
+        return [v for v in val if hasattr(v, "jaxpr") or hasattr(v, "eqns")]
+    return []
+
+
+def aval_bytes(aval) -> int:
+    size = 1
+    for d in aval.shape:
+        size *= int(d)
+    return size * aval.dtype.itemsize
+
+
+def gather_stats(jaxpr) -> List[Dict[str, int]]:
+    """Every ``gather`` eqn's (output bytes, source-operand bytes)."""
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "gather":
+            continue
+        out_b = sum(aval_bytes(v.aval) for v in eqn.outvars)
+        src_b = aval_bytes(eqn.invars[0].aval)
+        out.append({"output_bytes": out_b, "source_bytes": src_b})
+    return out
+
+
+def convert_stats(jaxpr) -> List[Dict[str, Any]]:
+    """Every ``convert_element_type`` eqn's (from, to, output bytes)."""
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        out.append({
+            "from": str(eqn.invars[0].aval.dtype),
+            "to": str(eqn.outvars[0].aval.dtype),
+            "to_itemsize": eqn.outvars[0].aval.dtype.itemsize,
+            "output_bytes": aval_bytes(eqn.outvars[0].aval),
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Donation / alias extraction
+# ---------------------------------------------------------------------------
+
+_ALIAS_PARAM_RE = re.compile(r"\((\d+), \{")
+
+
+def parse_aliased_params(hlo_text: str) -> FrozenSet[int]:
+    """HLO parameter numbers appearing in the module's ``input_output_alias``
+    attribute (empty when no donation survived compilation)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return frozenset()
+    # scan the balanced-brace attribute body (entries nest one brace deep)
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(hlo_text)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                body = hlo_text[i : j + 1]
+                return frozenset(int(m) for m in _ALIAS_PARAM_RE.findall(body))
+    return frozenset()
+
+
+def _leaf_label(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def donated_leaf_map(
+    args: Sequence, donate_argnums: Tuple[int, ...]
+) -> Dict[int, str]:
+    """Flat leaf index -> label for every leaf of every donated argument.
+
+    With ``keep_unused=True`` the executable keeps one parameter per
+    flattened argument leaf, in flatten order, so the flat index *is* the
+    HLO parameter number."""
+    donated: Dict[int, str] = {}
+    offset = 0
+    for i, arg in enumerate(args):
+        leaves = jax.tree_util.tree_leaves_with_path(arg)
+        if i in donate_argnums:
+            for k, (path, _leaf) in enumerate(leaves):
+                donated[offset + k] = f"arg{i}{_leaf_label(path)}"
+        offset += len(leaves)
+    return donated
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+
+def compile_step(spec: StepSpec) -> CompiledStep:
+    """Lower + compile one step spec and extract the rule-facing facts."""
+    jaxpr = jax.make_jaxpr(spec.fn)(*spec.args)
+    artifact = lower_and_compile(
+        spec.fn,
+        spec.args,
+        donate_argnums=spec.donate_argnums,
+        keep_unused=True,
+    )
+    leaf_labels = donated_leaf_map(spec.args, spec.donate_argnums)
+    return CompiledStep(
+        spec=spec,
+        artifact=artifact,
+        jaxpr=jaxpr,
+        donated_params=frozenset(leaf_labels),
+        aliased_params=parse_aliased_params(artifact.hlo_text()),
+        donated_leaf_labels=leaf_labels,
+        memory=artifact.memory_record(),
+    )
+
+
+def measure(cs: CompiledStep) -> Dict[str, int]:
+    """The numbers ``--write-budgets`` checks in for one compiled step."""
+    gathers = gather_stats(cs.jaxpr)
+    record = dict(cs.memory)
+    record["max_gather_bytes"] = max(
+        (g["output_bytes"] for g in gathers), default=0
+    )
+    return record

@@ -1,0 +1,183 @@
+"""RPJ101–RPJ105: the compiled-artifact rules.
+
+Each rule is ``rule(steps, inv, budgets) -> List[Finding]`` over the
+compiled inventory (:class:`harness.CompiledStep`); waivers from the
+budgets file suppress a rule per step (or globally).  All rules are pure
+artifact inspection except the RPJ104 probes, which drive real smoke-sized
+calls through a fresh jit to count compiled cache entries.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.analysis.jaxcheck import RULE_IDS, Budgets, Finding
+from repro.analysis.jaxcheck.harness import (
+    CompiledStep,
+    convert_stats,
+    gather_stats,
+)
+from repro.analysis.jaxcheck.inventory import Inventory
+
+
+def rule_rpj101(steps, inv, budgets) -> List[Finding]:
+    """Donation-effectiveness: every leaf of every ``donate_argnums``
+    argument must appear in the executable's ``input_output_alias`` — a
+    donated-but-unaliased buffer means XLA fell back to a copy and the
+    in-place pool update the engine depends on silently stopped happening."""
+    out = []
+    for cs in steps:
+        missing = sorted(cs.donated_params - cs.aliased_params)
+        if not missing:
+            continue
+        labels = ", ".join(cs.donated_leaf_labels[i] for i in missing[:4])
+        if len(missing) > 4:
+            labels += f", ... ({len(missing) - 4} more)"
+        out.append(Finding(
+            "RPJ101", cs.name,
+            f"donated buffer(s) not aliased to any output "
+            f"(donation became a copy): {labels}",
+        ))
+    return out
+
+
+def rule_rpj102(steps, inv, budgets) -> List[Finding]:
+    """Materialized-gather: the largest ``gather`` output in a step's
+    lowered jaxpr must stay under the step's ``max_gather_bytes`` budget —
+    the 'whole K/V pool gathered into a dense buffer' hazard."""
+    out = []
+    for cs in steps:
+        gathers = gather_stats(cs.jaxpr)
+        if not gathers:
+            continue
+        biggest = max(g["output_bytes"] for g in gathers)
+        budget = budgets.budget(cs.name, "max_gather_bytes")
+        if budget is None:
+            out.append(Finding(
+                "RPJ102", cs.name,
+                f"{len(gathers)} gather op(s) (largest output {biggest} B) "
+                f"but no max_gather_bytes budget — run --write-budgets",
+            ))
+        elif not budgets.allowed(cs.name, "max_gather_bytes", biggest):
+            out.append(Finding(
+                "RPJ102", cs.name,
+                f"gather output {biggest} B exceeds budget {budget} B "
+                f"(+{budgets.tolerance:.0%} tolerance)",
+            ))
+    return out
+
+
+def rule_rpj103(steps, inv, budgets) -> List[Finding]:
+    """Dtype-promotion drift: no ``convert_element_type`` in a hot step may
+    upcast past the planned widest dtype (``allowed_widest``) — a stray
+    float64/int64 promotion doubles the bytes every downstream op moves."""
+    widest = np.dtype(budgets.allowed_widest).itemsize
+    out = []
+    for cs in steps:
+        seen = set()
+        for c in convert_stats(cs.jaxpr):
+            if c["to_itemsize"] <= widest:
+                continue
+            pair = (c["from"], c["to"])
+            if pair in seen:
+                continue
+            seen.add(pair)
+            out.append(Finding(
+                "RPJ103", cs.name,
+                f"upcast {c['from']} -> {c['to']} is wider than "
+                f"allowed_widest={budgets.allowed_widest}",
+            ))
+    return out
+
+
+def rule_rpj104(steps, inv, budgets) -> List[Finding]:
+    """Retrace-closure: (a) statically, every chunk shape admission plans
+    must lie inside the enumerated closure; (b) live, driving each step's
+    probe calls through a fresh jit must compile exactly the declared
+    number of cache entries — more means a weak-type/shape leak is minting
+    unbounded jit signatures at serve time."""
+    out = []
+    for cs in steps:
+        spec = cs.spec
+        if spec.signature_plan is not None and spec.signature_closure is not None:
+            escaped = sorted(set(spec.signature_plan) - set(spec.signature_closure))
+            if escaped:
+                out.append(Finding(
+                    "RPJ104", cs.name,
+                    f"planned chunk shape(s) {escaped} escape the "
+                    f"enumerated closure {tuple(spec.signature_closure)}",
+                ))
+        if spec.probe is None:
+            continue
+        jitted = jax.jit(  # repro: noqa RPR003 -- one fresh jit per probed
+            # step, by design: counting its cache entries IS the check
+            spec.fn, donate_argnums=spec.donate_argnums
+        )
+        for key in spec.probe.keys:
+            jitted(*spec.probe.make_args(key))
+        entries = jitted._cache_size()
+        if entries != spec.probe.expected_entries:
+            out.append(Finding(
+                "RPJ104", cs.name,
+                f"{len(spec.probe.keys)} probe call(s) compiled {entries} "
+                f"jit cache entries, expected {spec.probe.expected_entries} "
+                f"(signature leak)",
+            ))
+    return out
+
+
+def rule_rpj105(steps, inv, budgets) -> List[Finding]:
+    """Memory-budget regression: ``compiled.memory_analysis()`` temp/
+    argument/output bytes must stay within the checked-in budget (plus
+    tolerance); a step with no budget at all must be baselined first."""
+    from repro.analysis.jaxcheck import GATED_MEMORY_FIELDS
+
+    out = []
+    for cs in steps:
+        for field in GATED_MEMORY_FIELDS:
+            value = cs.memory.get(field)
+            if value is None:
+                continue  # backend doesn't report this field
+            budget = budgets.budget(cs.name, field)
+            if budget is None:
+                out.append(Finding(
+                    "RPJ105", cs.name,
+                    f"no budget for {field} (measured {value} B) — "
+                    f"run --write-budgets",
+                ))
+            elif not budgets.allowed(cs.name, field, value):
+                out.append(Finding(
+                    "RPJ105", cs.name,
+                    f"{field} {value} B exceeds budget {budget} B "
+                    f"(+{budgets.tolerance:.0%} tolerance)",
+                ))
+    return out
+
+
+RULES: Dict[str, Callable] = {
+    "RPJ101": rule_rpj101,
+    "RPJ102": rule_rpj102,
+    "RPJ103": rule_rpj103,
+    "RPJ104": rule_rpj104,
+    "RPJ105": rule_rpj105,
+}
+assert tuple(RULES) == RULE_IDS
+
+
+def run_rules(
+    steps: Sequence[CompiledStep],
+    inv: Inventory,
+    budgets: Budgets,
+    select: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """All (selected) rules over the compiled inventory, waivers applied."""
+    selected = tuple(select) if select else RULE_IDS
+    findings: List[Finding] = []
+    for rule_id in selected:
+        for f in RULES[rule_id](steps, inv, budgets):
+            if not budgets.waived(f.rule, f.step):
+                findings.append(f)
+    return findings

@@ -17,6 +17,9 @@ rule id      what it catches
              registry (``src/repro/models/adapters.py``)
 ``RPR005``   stray ``print`` / ``jax.debug.print`` / ``breakpoint()`` in
              ``src/``
+``RPR006``   explicit device->host transfer (``jax.device_get`` /
+             ``.block_until_ready()`` / ``np.array(...)``) inside a
+             ``# repro: hot-loop`` function
 ===========  ==================================================================
 
 Suppression pragmas (trailing comments):
@@ -56,7 +59,7 @@ __all__ = [
     "RULE_DOCS",
 ]
 
-RULE_IDS = ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005")
+RULE_IDS = ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006")
 
 RULE_DOCS = {
     "RPR001": "use-after-donation: donated buffer read again before rebinding",
@@ -64,6 +67,7 @@ RULE_DOCS = {
     "RPR003": "jax.jit / jitted-partial constructed inside a loop",
     "RPR004": "layer-family branch outside the adapter registry",
     "RPR005": "stray print / jax.debug.print / breakpoint() in src/",
+    "RPR006": "explicit device->host transfer in a `# repro: hot-loop` function",
 }
 
 

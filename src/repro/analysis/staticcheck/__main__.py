@@ -8,6 +8,7 @@ findings, 2 usage error.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -27,7 +28,7 @@ DEFAULT_BASELINE = "staticcheck.baseline"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.staticcheck",
-        description="Repo-specific jit-aware lint pass (rules RPR001-RPR005).",
+        description="Repo-specific jit-aware lint pass (rules RPR001-RPR006).",
     )
     ap.add_argument(
         "paths",
@@ -58,6 +59,12 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--list-rules", action="store_true", help="print the rule table and exit"
+    )
+    ap.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="output format: human-readable text (default) or a JSON report",
     )
     args = ap.parse_args(argv)
 
@@ -95,6 +102,26 @@ def main(argv=None) -> int:
     if not args.no_baseline and baseline_path.is_file():
         baseline = load_baseline(baseline_path)
     new, old = split_by_baseline(findings, baseline)
+
+    if args.format == "json":
+        report = {
+            "tool": "staticcheck",
+            "status": "findings" if new else "clean",
+            "n_new": len(new),
+            "n_baselined": len(old),
+            "findings": [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "line": f.line,
+                    "col": f.col,
+                    "message": f.message,
+                }
+                for f in new
+            ],
+        }
+        print(json.dumps(report, indent=2))
+        return 1 if new else 0
 
     for f in new:
         print(f.format())

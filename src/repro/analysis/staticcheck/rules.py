@@ -474,10 +474,75 @@ def rule_rpr005(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
     return findings
 
 
+# ---------------------------------------------------------------------------
+# RPR006 — explicit device->host transfer in a `# repro: hot-loop` function
+# ---------------------------------------------------------------------------
+#
+# RPR002 catches the *accidental* syncs (`.item()`, `float(x)`); this rule
+# catches the spelled-out ones: `jax.device_get(x)`, `x.block_until_ready()`
+# and `np.array(x)` each pull a device value to the host (or block until it
+# lands) and serialize the dispatch pipeline when they sit inside a
+# hot-loop function.  Sanctioned sync points carry a `# repro: noqa RPR006`
+# pragma with the justification, same as RPR002.
+
+_TRANSFER_CALLS = {"jax.device_get", "np.array", "numpy.array"}
+_TRANSFER_METHODS = {"block_until_ready", "copy_to_host_async"}
+
+
+def _is_host_literal(node: ast.AST) -> bool:
+    """A value built purely from literals — no device array involved."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+        return all(_is_host_literal(e) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        return all(
+            k is not None and _is_host_literal(k) and _is_host_literal(v)
+            for k, v in zip(node.keys, node.values)
+        )
+    return False
+
+
+def rule_rpr006(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in _hot_functions(tree, ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted in _TRANSFER_CALLS:
+                # np.array(LITERAL) builds a host constant — no device involved
+                if node.args and all(_is_host_literal(a) for a in node.args):
+                    continue
+                findings.append(
+                    ctx.finding(
+                        "RPR006",
+                        node,
+                        f"`{dotted}(...)` in hot-loop `{fn.name}` transfers "
+                        "a device value to host; defer the fetch or pragma "
+                        "the sanctioned sync point",
+                    )
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _TRANSFER_METHODS
+            ):
+                findings.append(
+                    ctx.finding(
+                        "RPR006",
+                        node,
+                        f"`.{node.func.attr}()` in hot-loop `{fn.name}` "
+                        "blocks the dispatch pipeline on device completion",
+                    )
+                )
+    return findings
+
+
 RULES: Dict[str, Callable[[ast.AST, RuleContext], List[Finding]]] = {
     "RPR001": rule_rpr001,
     "RPR002": rule_rpr002,
     "RPR003": rule_rpr003,
     "RPR004": rule_rpr004,
     "RPR005": rule_rpr005,
+    "RPR006": rule_rpr006,
 }

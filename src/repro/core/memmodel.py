@@ -28,7 +28,7 @@ Modeling choices (documented deviations from gem5):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -389,7 +389,7 @@ def simulate_layer(
     accel: AccelSpec,
     layout: str,
     cores: int = 1,
-    cache: CacheConfig = CacheConfig(),
+    cache: Optional[CacheConfig] = None,
 ) -> Dict[str, MemStats]:
     """Simulate one encoder layer; returns per-component and 'total' stats.
 
@@ -397,6 +397,7 @@ def simulate_layer(
     core has a private L1, the L2 stream is the interleaved per-core miss
     streams (shared 1 MB L2), and wall-cycles divide the parallel work.
     """
+    cache = cache or CacheConfig()
     results: Dict[str, MemStats] = {}
     total = MemStats()
     for name, trace, meta in bert_layer_components(wl, accel, layout):

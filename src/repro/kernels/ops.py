@@ -18,6 +18,7 @@ directly.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -77,10 +78,11 @@ def matmul_rwma(a: jnp.ndarray, b: jnp.ndarray, bm=128, bk=128, bn=128):
 
 
 def matmul_bwma_2d(
-    a: jnp.ndarray, b: jnp.ndarray, layout: BlockLayout = BlockLayout(128, 128)
+    a: jnp.ndarray, b: jnp.ndarray, layout: Optional[BlockLayout] = None
 ) -> jnp.ndarray:
     """Convenience: 2-D in, 2-D out, blocked internally (conversion at edges
     only — mirrors the paper's whole-model I/O conversion)."""
+    layout = layout or BlockLayout(128, 128)
     ab = to_blockwise(a, BlockLayout(layout.bm, layout.bn))
     bb = to_blockwise(b, BlockLayout(layout.bn, layout.bn))
     out = bwma_gemm(ab, bb, interpret=_interpret())

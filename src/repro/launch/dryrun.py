@@ -22,7 +22,6 @@ Usage:
 import argparse
 import json
 import re
-import time
 import traceback
 from typing import Dict
 
@@ -31,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as C
+from repro.analysis.aot import lower_and_compile, memory_record
 from repro.configs.shapes import applicable, input_specs
 from repro.distributed import axes as AX
 from repro.distributed import sharding as SH
@@ -160,37 +160,21 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> Dict:
         rec.update(status="skipped", reason=reason)
         return rec
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-    t0 = time.time()
     try:
         fn, args, in_sh, out_sh, donate, info = build_cell(cfg, shape_name, mesh)
         with mesh, AX.policy(mesh):
-            jitted = jax.jit(
-                fn, in_shardings=in_sh, out_shardings=out_sh,
+            art = lower_and_compile(
+                fn, args, in_shardings=in_sh, out_shardings=out_sh,
                 donate_argnums=donate,
             )
-            lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
-            mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
-            coll = collective_bytes(compiled.as_text())
+            cost = art.cost_analysis()
+            coll = collective_bytes(art.hlo_text())
         rec.update(
             status="ok",
-            lower_s=round(t_lower, 1),
-            compile_s=round(t_compile, 1),
+            lower_s=round(art.lower_s, 1),
+            compile_s=round(art.compile_s, 1),
             n_devices=mesh.size,
-            memory={
-                k: int(getattr(mem, k))
-                for k in (
-                    "temp_size_in_bytes",
-                    "argument_size_in_bytes",
-                    "output_size_in_bytes",
-                    "alias_size_in_bytes",
-                    "generated_code_size_in_bytes",
-                )
-                if hasattr(mem, k)
-            },
+            memory=memory_record(art.compiled),
             flops=float(cost.get("flops", -1)) if cost else -1,
             bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
             collectives=coll,

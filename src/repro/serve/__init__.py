@@ -1,3 +1,9 @@
+from repro.models.adapters import (
+    prefix_compute_skippable,
+    prefix_shareable,
+    supported_families,
+    unsupported_reason,
+)
 from repro.serve.engine import (
     Engine,
     EngineConfig,
@@ -7,12 +13,6 @@ from repro.serve.engine import (
     frontend_extras,
     make_requests,
     run_static_waves,
-)
-from repro.models.adapters import (
-    prefix_compute_skippable,
-    prefix_shareable,
-    supported_families,
-    unsupported_reason,
 )
 from repro.serve.kvcache import (
     CacheAudit,

@@ -87,6 +87,71 @@ def bucket_tokens(n: int, block: int) -> int:
     return (1 << (pages - 1).bit_length()) * block
 
 
+# --------------------------------------------------------------------------
+# Chunk-shape closure: the jit signatures chunked admission may compile.
+#
+# These are module-level (not Engine methods) so the compiled-artifact
+# linter (repro.analysis.jaxcheck, rule RPJ104) can statically enumerate the
+# engine's expected jit-cache key set without constructing an engine — and
+# fail when a code change lets a prompt length escape the closure.
+# --------------------------------------------------------------------------
+
+
+def resolve_chunk_size(cfg: ModelConfig, page_size: int, requested: int = 0) -> int:
+    """Prefill chunk size: page-sized by default, adapter-grid-aligned
+    (see :meth:`Engine._resolve_chunk`, which delegates here)."""
+    grid = A.prefill_chunk_multiple(cfg)
+    if requested:
+        if requested < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {requested}")
+        if requested % grid:
+            raise ValueError(
+                f"prefill_chunk {requested} must be a multiple of "
+                f"the cache adapters' chunk grid {grid}"
+            )
+        return requested
+    return math.lcm(page_size, grid)
+
+
+def final_chunk_len(cfg: ModelConfig, chunk_size: int, n: int) -> int:
+    """Jit shape for a final (ragged) chunk of ``n`` real tokens: bucketed
+    to the next power of two for dense/GQA, exact (capped by the chunk
+    size) where semantics require it (SWA rings, SSM states, MoE)."""
+    if not M.supports_padded_prefill(cfg):
+        return n
+    return min(bucket_tokens(n, 1), chunk_size)
+
+
+def chunk_plan(cfg: ModelConfig, chunk_size: int, prompt_len: int,
+               cached: int = 0) -> List[int]:
+    """The chunk jit shapes (token lengths) admission runs for a prompt of
+    ``prompt_len`` tokens, ``cached`` of them served from the prefix cache
+    (chunking resumes at the first uncached token)."""
+    plan: List[int] = []
+    off = cached
+    while off < prompt_len:
+        n = min(chunk_size, prompt_len - off)
+        last = off + n >= prompt_len
+        plan.append(final_chunk_len(cfg, chunk_size, n) if last else chunk_size)
+        off += n
+    return plan
+
+
+def chunk_shape_set(cfg: ModelConfig, chunk_size: int) -> tuple:
+    """Every chunk length :func:`chunk_plan` can ever emit — the closed set
+    of ``prefill_chunk`` jit signatures for this (config, chunk size).
+    Bucketing families: the full chunk plus each power of two below it;
+    exact-shape families: every length up to the chunk size."""
+    if M.supports_padded_prefill(cfg):
+        shapes = {chunk_size}
+        p = 1
+        while p <= chunk_size:
+            shapes.add(p)
+            p *= 2
+        return tuple(sorted(shapes))
+    return tuple(range(1, chunk_size + 1))
+
+
 # jitted step functions are memoized per (hashable, frozen) ModelConfig so
 # every engine instance — and repeated benchmark constructions — share one
 # compile cache; the mesh path builds its own closures under the mesh context
@@ -136,6 +201,29 @@ def _prefill_chunk_fn(cfg: ModelConfig):
         functools.partial(M.prefill_chunk, cfg),
         donate_argnums=_donate_caches(),
     )
+
+
+def jitted_step_fns(cfg: ModelConfig) -> Dict[str, tuple]:
+    """The continuous engine's jitted hot-path steps, **un-jitted**.
+
+    ``{name: (fn, donate_argnums)}`` — the inventory the compiled-artifact
+    linter (:mod:`repro.analysis.jaxcheck`) lowers and compiles ahead of
+    time.  These are exactly the callables the engine wraps in
+    :func:`_decode_paged_fn` / :func:`_prefill_chunk_fn`; the cache-install
+    and COW steps live with the pool they mutate
+    (:func:`repro.serve.kvcache.install_step` /
+    :func:`repro.serve.kvcache.cow_step`).
+    """
+    from repro.serve import kvcache as KV
+
+    return {
+        "decode_step": (functools.partial(_paged_step, cfg), _donate_caches()),
+        "prefill_chunk": (
+            functools.partial(M.prefill_chunk, cfg), _donate_caches()
+        ),
+        "cow_copy": (KV.cow_step(cfg), KV.POOL_DONATE),
+        "install": (KV.install_step(cfg), KV.POOL_DONATE),
+    }
 
 
 class Server:
@@ -461,17 +549,7 @@ class Engine:
         the one-shot path, bit-exactness); attention families accept any
         boundary (grid 1).
         """
-        grid = A.prefill_chunk_multiple(self.cfg)
-        if requested:
-            if requested < 1:
-                raise ValueError(f"prefill_chunk must be >= 1, got {requested}")
-            if requested % grid:
-                raise ValueError(
-                    f"prefill_chunk {requested} must be a multiple of "
-                    f"the cache adapters' chunk grid {grid}"
-                )
-            return requested
-        return math.lcm(self.kv.page_size, grid)
+        return resolve_chunk_size(self.cfg, self.kv.page_size, requested)
 
     def _last_chunk_len(self, n: int) -> int:
         """Jit shape for a final (ragged) chunk of ``n`` real tokens.
@@ -482,9 +560,7 @@ class Engine:
         states need the exact length, which is still capped by the chunk
         size, so shapes stay bounded either way.
         """
-        if not M.supports_padded_prefill(self.cfg):
-            return n
-        return min(bucket_tokens(n, 1), self.chunk_size)
+        return final_chunk_len(self.cfg, self.chunk_size, n)
 
     def _install_admission_context(self, slot: int, req: Request) -> None:
         """Run the registry's admission-time installs for a fresh slot

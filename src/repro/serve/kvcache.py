@@ -60,9 +60,16 @@ from repro.models import model as M
 NULL_PAGE = 0  # reserved physical page: idle-slot writes, unmapped gathers
 
 
-# one jitted donating updater per model config: every slot write (paged
-# scatter, ring row, SSM state row, cross rows) happens inside a single jit
-# call whose cache-pool argument is DONATED — the pool is updated in place
+# donate position of the cache-pool pytree in the install/COW steps below
+# (argument 0 of both) — exported so the AOT inventory
+# (repro.serve.engine.jitted_step_fns -> repro.analysis.jaxcheck) declares
+# the same donation the runtime jits ask for
+POOL_DONATE = (0,)
+
+
+# the raw (un-jitted) slot-write updater: every slot write (paged scatter,
+# ring row, SSM state row, cross rows) happens inside a single call whose
+# cache-pool argument the runtime jit DONATES — the pool is updated in place
 # instead of being copied per admission (the eager host-side `.at[].set`
 # path copied the entire multi-layer pool for every request installed).
 # Which write each cache entry needs is the entry's adapter's business
@@ -70,8 +77,7 @@ NULL_PAGE = 0  # reserved physical page: idle-slot writes, unmapped gathers
 # Partial sources install only the keys they carry (e.g. the enc-dec
 # admission installs cross rows alone, before any prompt chunk runs) —
 # distinct source structures get their own jit entries, shapes stay bounded.
-@functools.lru_cache(maxsize=None)
-def _install_fn(cfg: ModelConfig):
+def install_step(cfg: ModelConfig):
     def install(data, src, slot, phys_tok, off_tok):
         out = {}
         for si, (kind, _n) in enumerate(M.layer_segments(cfg)):
@@ -91,17 +97,22 @@ def _install_fn(cfg: ModelConfig):
             out[seg] = new
         return out
 
-    return jax.jit(install, donate_argnums=(0,))
+    return install
 
 
-# one jitted donating page copier per model config: the COW step.  Copies
-# physical page ``src`` -> ``dst`` in every shareable paged pool (dense/GQA
-# K/V pages, MLA latent pages) with the cache pytree DONATED — the copy-on-
-# write of one page never copies (or even briefly doubles) the pool.  Page
-# ids are traced scalars, so every COW event in a config's lifetime shares
-# one compiled shape.
+# one jitted donating updater per model config
 @functools.lru_cache(maxsize=None)
-def _cow_fn(cfg: ModelConfig):
+def _install_fn(cfg: ModelConfig):
+    return jax.jit(install_step(cfg), donate_argnums=POOL_DONATE)
+
+
+# the raw (un-jitted) COW page copier: copies physical page ``src`` ->
+# ``dst`` in every shareable paged pool (dense/GQA K/V pages, MLA latent
+# pages); the runtime jit DONATES the cache pytree, so the copy-on-write of
+# one page never copies (or even briefly doubles) the pool.  Page ids are
+# traced scalars, so every COW event in a config's lifetime shares one
+# compiled shape.
+def cow_step(cfg: ModelConfig):
     def copy(data, src, dst):
         out = {}
         for si, (kind, _n) in enumerate(M.layer_segments(cfg)):
@@ -115,7 +126,13 @@ def _cow_fn(cfg: ModelConfig):
             out[seg] = new
         return out
 
-    return jax.jit(copy, donate_argnums=(0,))
+    return copy
+
+
+# one jitted donating page copier per model config: the COW step
+@functools.lru_cache(maxsize=None)
+def _cow_fn(cfg: ModelConfig):
+    return jax.jit(cow_step(cfg), donate_argnums=POOL_DONATE)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,9 +56,10 @@ class Trainer:
         cfg: ModelConfig,
         mesh,
         tc: TrainerConfig,
-        oc: OptConfig = OptConfig(),
+        oc: Optional[OptConfig] = None,
         lr_fn: Optional[Callable] = None,
     ):
+        oc = oc or OptConfig()
         self.cfg, self.mesh, self.tc, self.oc = cfg, mesh, tc, oc
         self.lr_fn = lr_fn or cosine_schedule(oc.lr, 10, tc.steps)
         self.ckpt = (

@@ -330,6 +330,86 @@ def test_rpr005_noqa_file():
 
 
 # --------------------------------------------------------------------------
+# RPR006 — explicit device->host transfer in a hot-loop function
+# --------------------------------------------------------------------------
+
+def test_rpr006_positive_transfers():
+    src = """
+        import jax
+        import numpy as np
+
+        def step(self, x):  # repro: hot-loop
+            host = jax.device_get(x)
+            arr = np.array(x)
+            x.block_until_ready()
+            return host
+    """
+    assert _rules(src, select=["RPR006"]) == ["RPR006"] * 3
+
+
+def test_rpr006_negative_outside_hot_loop():
+    src = """
+        import jax
+        import numpy as np
+
+        def report(x):
+            return np.array(jax.device_get(x))
+    """
+    assert _rules(src, select=["RPR006"]) == []
+
+
+def test_rpr006_negative_np_array_of_constant():
+    src = """
+        import numpy as np
+
+        def step(self):  # repro: hot-loop
+            return np.array([0, 1, 2])
+    """
+    assert _rules(src, select=["RPR006"]) == []
+
+
+def test_rpr006_pragma_suppression():
+    src = """
+        import jax
+
+        def step(self, x):  # repro: hot-loop
+            return jax.device_get(x)  # repro: noqa RPR006 -- sanctioned sync
+    """
+    assert _rules(src, select=["RPR006"]) == []
+
+
+# --------------------------------------------------------------------------
+# CLI --format json
+# --------------------------------------------------------------------------
+
+def test_cli_format_json(tmp_path, capsys):
+    import json
+
+    from repro.analysis.staticcheck.__main__ import main
+
+    bad = tmp_path / "src" / "repro" / "fake.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(x):\n    print(x)\n", encoding="utf-8")
+    rc = main([str(bad), "--format", "json", "--no-baseline"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert report["status"] == "findings"
+    assert report["n_new"] == 1
+    assert report["findings"][0]["rule"] == "RPR005"
+    assert report["findings"][0]["line"] == 2
+
+    good = tmp_path / "src" / "repro" / "ok.py"
+    good.write_text("def f(x):\n    return x\n", encoding="utf-8")
+    rc = main([str(good), "--format", "json", "--no-baseline"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert report == {
+        "tool": "staticcheck", "status": "clean", "n_new": 0,
+        "n_baselined": 0, "findings": [],
+    }
+
+
+# --------------------------------------------------------------------------
 # Pragmas, baseline, CLI plumbing
 # --------------------------------------------------------------------------
 

@@ -10,10 +10,10 @@ import repro.configs as C
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMData
 from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
 from repro.optim import OptConfig, adamw_init, wsd_schedule
 from repro.serve import ServeConfig, Server
 from repro.train import Trainer, TrainerConfig
-from repro.models import model as M
 
 
 def _tiny_cfg():
