@@ -45,6 +45,24 @@ def run(scale: float = 1.0, backend: str = "reference"):
     emit("kernel/vmem_working_set_bytes", 0.0,
          f"{vmem} ({vmem/2**20:.2f} MiB of ~16 MiB)")
 
+    # paged-decode structural numbers: per grid step the fused decode kernel
+    # fetches exactly one physical K/V page — a trailing-dims-contiguous
+    # (1, page, hkv, dh) tile, one DMA descriptor — while the reference path
+    # first materializes every slot's gathered history in HBM
+    # (max_pages * page tokens per slot, K and V).  Serving-shaped numbers
+    # (page=128 tokens, 8 KV heads, d_head=128, bf16):
+    page_tok, hkv, dh = 128, 8, 128
+    maxp = 8  # 1k-token history
+    tile = page_tok * hkv * dh * esize
+    gathered = 2 * maxp * tile  # K+V, per slot per layer per decode step
+    emit("kernel/paged_decode/dma_descriptors_per_step", 0.0, "1")
+    emit("kernel/paged_decode/bytes_per_descriptor", 0.0, f"{tile}")
+    emit("kernel/paged_decode/reference_gather_bytes", 0.0,
+         f"{gathered} (per slot/layer/step; kernel streams, never lands)")
+    vmem_paged = (2 * page_tok * hkv * dh + 2 * page_tok) * 4
+    emit("kernel/paged_decode/vmem_working_set_bytes", 0.0,
+         f"{vmem_paged} ({vmem_paged/2**20:.2f} MiB of ~16 MiB)")
+
     # blocked GEMM wall time through the selected execution backend
     # ("reference" = pure-jnp on XLA:CPU; "pallas" = the BWMA kernels,
     # interpret mode off-TPU — a dispatch/correctness signal there).

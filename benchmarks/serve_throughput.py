@@ -33,8 +33,14 @@ pool pages (the prefix is stored once, not once per request): those are
 the repo-level acceptance gates for shared-prefix serving.  Outputs must
 match between the two runs bit for bit.
 
+``--backend pallas`` runs the continuous engine through the fused
+paged-attention / COW kernels (interpret mode off-TPU) instead of the jnp
+gather oracle; the static baseline always serves through the reference
+path, so the parity check doubles as an engine-level backend gate.
+
 Every mode also merges its results (ratios, TTFT, tok/s, pool stats) into
-the ``BENCH_serve.json`` artifact (``--bench-out``; keyed ``mode:arch``)
+the ``BENCH_serve.json`` artifact (``--bench-out``; keyed ``mode:arch``,
+with ``:pallas`` appended for non-reference backends so both runs coexist)
 — the machine-readable perf trajectory CI uploads per run.
 
 Usage:  PYTHONPATH=src:. python benchmarks/serve_throughput.py [--arch ...]
@@ -76,10 +82,15 @@ def _write_bench(args, mode: str, payload: dict) -> None:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
         doc = {}
-    doc[f"{mode}:{args.arch}"] = payload
+    # the backend is a real result dimension: a pallas run coexists with the
+    # reference run under its own key instead of overwriting it
+    key = f"{mode}:{args.arch}"
+    if args.backend != "reference":
+        key += f":{args.backend}"
+    doc[key] = {"backend": args.backend, **payload}
     with open(args.bench_out, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
-    print(f"# bench artifact [{mode}:{args.arch}] -> {args.bench_out}")
+    print(f"# bench artifact [{key}] -> {args.bench_out}")
 
 
 def _run_static(cfg, params, reqs, args, max_len):
@@ -109,7 +120,7 @@ def _run_continuous(cfg, params, reqs, args, max_len):
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=args.max_seqs, max_len=max_len,
         page_size=args.page_size, seed=args.seed,
-        prefill_chunk=args.prefill_chunk,
+        prefill_chunk=args.prefill_chunk, backend=args.backend,
     ))
     for r in reqs:
         eng.submit(r["prompt"], r["max_new_tokens"],
@@ -174,7 +185,7 @@ def _long_prompt_trial(cfg, params, args, chunked: bool):
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=args.max_seqs, max_len=max_len, page_size=args.page_size,
         chunked_prefill=chunked, prefill_tokens_per_step=args.page_size,
-        seed=args.seed,
+        seed=args.seed, backend=args.backend,
     ))
     rng = np.random.default_rng(args.seed)
     victims = [
@@ -256,7 +267,7 @@ def _shared_prefix_trial(cfg, params, args, sharing: bool):
     max_len = prefix_tokens + args.prompt_len + args.max_new + 1
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=args.max_seqs, max_len=max_len, page_size=args.page_size,
-        seed=args.seed, prefix_sharing=sharing,
+        seed=args.seed, prefix_sharing=sharing, backend=args.backend,
     ))
     rng = np.random.default_rng(args.seed)
     prefix = rng.integers(0, cfg.vocab_size, size=(prefix_tokens,))
@@ -329,6 +340,12 @@ def run(scale: float = 1.0, argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prefill chunk tokens for the throughput run "
                          "(0 derives one page)")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="paged-decode path for the continuous engine: the "
+                         "jnp gather oracle or the fused paged-attention / "
+                         "COW kernels (compiled on TPU, interpret mode "
+                         "elsewhere).  Recorded in the bench artifact")
     ap.add_argument("--long-prompt", action="store_true",
                     help="run the chunked-admission stall gate instead")
     ap.add_argument("--long-prompt-len", type=int, default=512)
@@ -352,8 +369,8 @@ def run(scale: float = 1.0, argv=None):
         return run_shared_prefix(scale, args), None, "shared-prefix"
 
     print("# serve throughput: continuous batching vs static waves "
-          f"(arch={args.arch}, {args.num_requests} requests, "
-          f"max_seqs={args.max_seqs})")
+          f"(arch={args.arch}, backend={args.backend}, "
+          f"{args.num_requests} requests, max_seqs={args.max_seqs})")
     cfg = _scaled_cfg(args, scale)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     reqs = make_requests(

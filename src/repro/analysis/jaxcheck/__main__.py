@@ -46,6 +46,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seqs", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--backend", default="pallas",
+                    choices=("reference", "pallas"),
+                    help="decode/COW path the primary decode_step and "
+                         "cow_copy specs compile (default: pallas)")
     ap.add_argument("--budgets", default="jaxcheck.budgets",
                     help="budgets/waivers file (default: ./jaxcheck.budgets)")
     ap.add_argument("--write-budgets", action="store_true",
@@ -64,7 +68,7 @@ def main(argv=None) -> int:
 
     geometry = InventoryConfig(
         arch=args.arch, max_seqs=args.max_seqs, max_len=args.max_len,
-        page_size=args.page_size,
+        page_size=args.page_size, backend=args.backend,
     )
     inv = serving_inventory(geometry)
     steps = [compile_step(spec) for spec in inv.specs]
@@ -107,7 +111,7 @@ def main(argv=None) -> int:
             "arch": args.arch,
             "geometry": {
                 "max_seqs": args.max_seqs, "max_len": args.max_len,
-                "page_size": args.page_size,
+                "page_size": args.page_size, "backend": args.backend,
             },
             "chunk_size": inv.chunk_size,
             "chunk_closure": list(inv.chunk_closure),

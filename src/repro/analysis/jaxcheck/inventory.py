@@ -4,7 +4,10 @@ Builds a :class:`StepSpec` per hot-path jit signature of the continuous
 engine — the decode step, one prefill chunk per shape in the engine's
 chunk-shape closure, the COW page copy, and the unchunked prefill install —
 from the same callables the runtime jits
-(:func:`repro.serve.engine.jitted_step_fns`).  Arguments are
+(:func:`repro.serve.engine.jitted_step_fns`).  The decode and COW specs
+compile the kernelized (pallas) hot path by default and keep probe-less
+``*_reference`` twins for the jnp oracle; see
+:attr:`InventoryConfig.backend`.  Arguments are
 ``ShapeDtypeStruct`` pytrees at a smoke-sized geometry (the same shapes
 ``tests/test_sanitize.py`` exercises), so everything here lowers and
 compiles on CPU without touching real buffers; only the RPJ104 probes
@@ -37,6 +40,15 @@ class InventoryConfig:
     #: prompt lengths the RPJ104 closure check plans chunks for — a short
     #: prompt (ragged bucket), an exact chunk, and a multi-chunk prompt
     probe_prompt_lens: Tuple[int, ...] = (3, 8, 13)
+    #: decode/COW execution path the PRIMARY ``decode_step`` / ``cow_copy``
+    #: specs compile (``cfg.decode_backend``).  The default is the
+    #: kernelized pallas path — the serving hot loop this analysis exists
+    #: to budget: streaming pages through the fused kernel removes the
+    #: whole-history ``k_pages[page_table]`` gather from the lowered step,
+    #: which is exactly the RPJ102 ``max_gather_bytes`` drop the paper's
+    #: arrangement argument predicts.  The jnp oracle path stays gated as
+    #: ``decode_step_reference`` / ``cow_copy_reference``.
+    backend: str = "pallas"
 
 
 @dataclasses.dataclass
@@ -89,7 +101,13 @@ class _ProbeArena:
 def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
     inv = inv or InventoryConfig()
     cfg = model_config(inv)
+    # two step tables: the kernelized hot path the budgets gate (pallas by
+    # default, see InventoryConfig.backend) and the jnp oracle it must keep
+    # matching.  Only decode/COW dispatch on decode_backend; prefill chunks
+    # and install lower identically, so they come from the reference table.
+    cfg_hot = dataclasses.replace(cfg, decode_backend=inv.backend)
     steps = E.jitted_step_fns(cfg)
+    steps_hot = E.jitted_step_fns(cfg_hot)
     max_pages = max(1, -(-inv.max_len // inv.page_size))
     num_pages = inv.max_seqs * max_pages + 1
     B = inv.max_seqs
@@ -108,7 +126,14 @@ def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
     specs: List[StepSpec] = []
 
     # -- decode step: one signature, forever -------------------------------
-    decode_fn, decode_donate = steps["decode_step"]
+    # the primary spec compiles the kernelized path (inv.backend); the
+    # ``_reference`` twin keeps the jnp oracle lowering inventoried so its
+    # gather/temp footprint stays visible next to the kernel's.
+    decode_fn, decode_donate = steps_hot["decode_step"]
+    decode_args = (
+        params, caches, _sds((B, 1), jnp.int32), _sds((B,), jnp.int32),
+        _sds((B, max_pages), jnp.int32), _sds((B,), jnp.bool_),
+    )
 
     def _decode_args(_key):
         return (
@@ -120,13 +145,16 @@ def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
     specs.append(StepSpec(
         name="decode_step",
         fn=decode_fn,
-        args=(
-            params, caches, _sds((B, 1), jnp.int32), _sds((B,), jnp.int32),
-            _sds((B, max_pages), jnp.int32), _sds((B,), jnp.bool_),
-        ),
+        args=decode_args,
         donate_argnums=decode_donate,
         probe=ProbeSet(keys=(0, 1), make_args=_decode_args,
                        expected_entries=1),
+    ))
+    specs.append(StepSpec(
+        name="decode_step_reference",
+        fn=steps["decode_step"][0],
+        args=decode_args,
+        donate_argnums=steps["decode_step"][1],
     ))
 
     # -- prefill chunk: one spec per shape in the closure -------------------
@@ -167,7 +195,8 @@ def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
     full.signature_closure = closure
 
     # -- COW page copy: page ids are traced, one signature ------------------
-    cow_fn, cow_donate = steps["cow_copy"]
+    cow_fn, cow_donate = steps_hot["cow_copy"]
+    cow_args = (caches, _sds((), jnp.int32), _sds((), jnp.int32))
 
     def _cow_args(key):
         return (arena.fresh_caches(), jnp.int32(1 + key), jnp.int32(2 + key))
@@ -175,9 +204,15 @@ def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
     specs.append(StepSpec(
         name="cow_copy",
         fn=cow_fn,
-        args=(caches, _sds((), jnp.int32), _sds((), jnp.int32)),
+        args=cow_args,
         donate_argnums=cow_donate,
         probe=ProbeSet(keys=(0, 1), make_args=_cow_args, expected_entries=1),
+    ))
+    specs.append(StepSpec(
+        name="cow_copy_reference",
+        fn=steps["cow_copy"][0],
+        args=cow_args,
+        donate_argnums=steps["cow_copy"][1],
     ))
 
     # -- unchunked install: one full-prefill source structure ---------------

@@ -82,6 +82,13 @@ class ModelConfig:
     gemm_backend: str = "xla"
     block: int = 128  # accelerator block (BWMA quantum) when using kernels
 
+    # serving-engine paged-decode execution path (resolve_backend name):
+    # "reference" reads pages through the jnp gather->attend oracle;
+    # "pallas" streams pages through the fused paged-attention / paged-COW
+    # kernels (compiled on TPU, interpret mode elsewhere).  Part of the
+    # frozen config on purpose: every jitted step cache is keyed by it.
+    decode_backend: str = "reference"
+
     @property
     def padded_vocab(self) -> int:
         """Vocab padded to a TP-friendly multiple (Megatron-style): even

@@ -20,6 +20,15 @@ the paper's "Activation" category — no data movement depends on arrangement,
 so there is nothing for a kernel backend to change (the FFN fusion handles
 the one case where fusing them into a GEMM epilogue matters).
 
+The protocol also carries the serving engine's paged-decode operators
+(``paged_attention_decode``, ``mla_paged_attention_decode``,
+``paged_copy_page``): the engine's KV pages are sized to ``cfg.block``, so
+they are already kernel tiles — the reference backend reads them through
+the jnp gather->attend oracle, the pallas backend streams them page-by-page
+through the fused kernels in :mod:`repro.kernels.paged_attention`.  The
+engine selects per :attr:`ModelConfig.decode_backend` via
+:func:`resolve_backend`.
+
 Select a backend by name or instance::
 
     from repro.core import backend as B
@@ -42,6 +51,11 @@ from repro.kernels.bwma_gemm import bwma_gemm
 from repro.kernels.bwma_layernorm import bwma_layernorm
 from repro.kernels.bwma_softmax import bwma_softmax
 from repro.kernels.bwma_transpose import bwma_transpose
+from repro.kernels.paged_attention import (
+    mla_paged_attention_decode,
+    paged_attention_decode,
+    paged_copy,
+)
 
 
 @runtime_checkable
@@ -67,6 +81,19 @@ class Backend(Protocol):
     def attention(self, q: Blocked, k: Blocked, v: Blocked, *, scale) -> Blocked: ...
 
     def transpose(self, a: Blocked) -> Blocked: ...
+
+    # -- serving-engine paged-decode operators (raw arrays, not Blocked:
+    # -- the engine's pages already ARE kernel tiles — page size is
+    # -- cfg.block — so there is no separate blocked arrangement step) --
+
+    def paged_attention_decode(self, q, k_pages, v_pages, page_table,
+                               seq_pos): ...
+
+    def mla_paged_attention_decode(self, q_lat, q_rope, ckv_pages,
+                                   krope_pages, page_table, seq_pos, *,
+                                   scale): ...
+
+    def paged_copy_page(self, pools: Dict, src, dst) -> Dict: ...
 
     # -- layout-neutral element-wise ops (shared implementations) --
 
@@ -118,6 +145,35 @@ class ReferenceBackend(_ElementwiseMixin):
     def transpose(self, a: Blocked) -> Blocked:
         return bw.bw_transpose(a)
 
+    # -- paged-decode operators: the jnp gather->attend oracle paths.
+    # Lazy imports (models sits above core in the layering; the reference
+    # math lives next to the cache layouts it reads, mirroring how
+    # models.common.dense lazily resolves this module in the other
+    # direction).
+
+    def paged_attention_decode(self, q, k_pages, v_pages, page_table,
+                               seq_pos):
+        from repro.models import attention as attn
+
+        return attn.paged_gather_attend(
+            q, k_pages, v_pages, page_table, seq_pos
+        )
+
+    def mla_paged_attention_decode(self, q_lat, q_rope, ckv_pages,
+                                   krope_pages, page_table, seq_pos, *,
+                                   scale):
+        from repro.models import attention as attn
+
+        return attn.mla_paged_gather_attend(
+            q_lat, q_rope, ckv_pages, krope_pages, page_table, seq_pos,
+            scale=scale,
+        )
+
+    def paged_copy_page(self, pools: Dict, src, dst) -> Dict:
+        from repro.models import attention as attn
+
+        return attn.paged_copy_page(pools, src, dst)
+
 
 class PallasBackend(_ElementwiseMixin):
     """The Pallas BWMA kernels — the execution path the paper describes.
@@ -143,6 +199,18 @@ class PallasBackend(_ElementwiseMixin):
             static_argnames=("scale",),
         )
         self._transpose = jax.jit(functools.partial(bwma_transpose, interpret=ip))
+        # the paged-decode kernels are deliberately NOT jitted here: they
+        # trace inline inside the engine's already-jitted decode / COW
+        # steps (a nested pjit would hazard the donation aliasing the
+        # engine's in-place pool update depends on); standalone callers
+        # (benchmarks, tests) jit them as needed
+        self._paged_attention_decode = functools.partial(
+            paged_attention_decode, interpret=ip
+        )
+        self._mla_paged_attention_decode = functools.partial(
+            mla_paged_attention_decode, interpret=ip
+        )
+        self._paged_copy = functools.partial(paged_copy, interpret=ip)
 
     @property
     def interpret(self) -> bool:
@@ -167,6 +235,26 @@ class PallasBackend(_ElementwiseMixin):
 
     def transpose(self, a: Blocked) -> Blocked:
         return self._transpose(a)
+
+    def paged_attention_decode(self, q, k_pages, v_pages, page_table,
+                               seq_pos):
+        return self._paged_attention_decode(
+            q, k_pages, v_pages, page_table, seq_pos
+        )
+
+    def mla_paged_attention_decode(self, q_lat, q_rope, ckv_pages,
+                                   krope_pages, page_table, seq_pos, *,
+                                   scale):
+        return self._mla_paged_attention_decode(
+            q_lat, q_rope, ckv_pages, krope_pages, page_table, seq_pos,
+            scale=scale,
+        )
+
+    def paged_copy_page(self, pools: Dict, src, dst) -> Dict:
+        return {
+            name: self._paged_copy(pool, src, dst)
+            for name, pool in pools.items()
+        }
 
 
 BACKENDS: Dict[str, Callable[..., Backend]] = {

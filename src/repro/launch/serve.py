@@ -15,6 +15,12 @@ through immutable per-slot cross rows + paged decoder self-attention:
   PYTHONPATH=src python -m repro.launch.serve --arch whisper-tiny --smoke \
       --num-requests 6 --max-seqs 2 --prompt-len 8 --max-new 12
 
+``--backend pallas`` serves the paged decode + COW path through the fused
+Pallas kernels (compiled on TPU, interpret mode elsewhere):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
+      --num-requests 6 --max-seqs 2 --backend pallas
+
 Legacy single-wave batched generation (also the only path for the vision
 frontend, which the adapter registry does not cover yet):
 
@@ -94,6 +100,7 @@ def run_workload(cfg, params, args):
             prefill_tokens_per_step=args.prefill_tokens_per_step,
             prefill_chunks_per_step=args.prefill_chunks_per_step,
             prefix_sharing=not args.no_prefix_sharing,
+            backend=args.backend,
             debug_audit=args.debug_audit,
             obs=args.obs,
         ))
@@ -191,6 +198,13 @@ def main():
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="one-shot prefill per admission (the pre-chunking "
                          "behavior; still installed via donating jit)")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="paged-decode path for the continuous engine: the "
+                         "jnp gather oracle or the fused paged-attention / "
+                         "COW kernels (compiled on TPU, interpret mode "
+                         "elsewhere; families without paged decode fall "
+                         "back to their reference path)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the shared-prefix page cache (radix "
                          "index + refcounted aliasing + copy-on-write); "

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backend import resolve_backend
 from repro.models import attention as attn
 from repro.models import ssm as ssmm
 
@@ -187,7 +188,9 @@ class PagedAttnAdapter(CacheAdapter):
         return attn.paged_cache_init(cfg, geom.num_pages, geom.page_size)
 
     def copy_page(self, cfg, seg_cache, src, dst):
-        return attn.paged_copy_page(seg_cache, src, dst)
+        return resolve_backend(cfg.decode_backend).paged_copy_page(
+            seg_cache, src, dst
+        )
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return _install_paged(dst, src, phys_tok, off_tok,
@@ -275,7 +278,9 @@ class LatentMLAAdapter(CacheAdapter):
         return attn.mla_paged_cache_init(cfg, geom.num_pages, geom.page_size)
 
     def copy_page(self, cfg, seg_cache, src, dst):
-        return attn.paged_copy_page(seg_cache, src, dst)
+        return resolve_backend(cfg.decode_backend).paged_copy_page(
+            seg_cache, src, dst
+        )
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return _install_paged(dst, src, phys_tok, off_tok,

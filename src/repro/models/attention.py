@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backend import resolve_backend
 from repro.distributed.axes import constrain
 from repro.models.common import (
     apply_mrope,
@@ -159,6 +160,27 @@ def paged_cache_init(cfg: ModelConfig, num_pages: int, page_size: int) -> Dict:
     }
 
 
+def paged_gather_attend(q, k_pages, v_pages, page_table, seq_pos):
+    """The jnp gather->attend oracle read (the ``"reference"`` backend op).
+
+    Gathers each slot's logical pages back into a dense (B, max_pages*page,
+    Hkv, dh) HBM buffer and runs the same masked one-token attention as the
+    linear cache — keys beyond ``seq_pos`` (tail of a partial page, unmapped
+    null-page entries, stale pages of retired requests) sit at positions
+    above it and mask exactly like empty slots.
+    """
+    B = q.shape[0]
+    page, hkv, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    maxp = page_table.shape[1]
+    kg = k_pages[page_table].reshape(B, maxp * page, hkv, dh)
+    vg = v_pages[page_table].reshape(B, maxp * page, hkv, dh)
+    # gathered keys sit at their absolute positions by construction
+    k_positions = jnp.broadcast_to(
+        jnp.arange(maxp * page, dtype=jnp.int32)[None], (B, maxp * page)
+    )
+    return decode_attention(q, kg, vg, k_positions, seq_pos, window=None)
+
+
 def gqa_paged_decode(
     p: Dict,
     cfg: ModelConfig,
@@ -172,10 +194,11 @@ def gqa_paged_decode(
     """One-token decode against the block-paged cache.
 
     Write: the new K/V lands in page ``page_table[b, pos // page]`` at offset
-    ``pos % page``.  Read: gather each slot's logical pages back into order
-    and run the same masked one-token attention as the linear cache — keys
-    beyond ``seq_pos`` (tail of a partial page, unmapped null-page entries,
-    stale pages of retired requests) are masked exactly like empty slots.
+    ``pos % page``.  Read: through ``cfg.decode_backend`` — the reference
+    backend gathers each slot's logical pages back into order and runs the
+    linear cache's masked attention (:func:`paged_gather_attend`); the
+    pallas backend streams the page-table row through the fused kernel
+    without materializing the gathered history.
 
     ``active`` marks slots whose write should land: inactive slots (idle,
     or mid-way through a chunked prefill — whose page table rows are live!)
@@ -195,17 +218,8 @@ def gqa_paged_decode(
     # seq_pos 0, so their writes land in the reserved null page)
     k_pages = cache["k_pages"].at[phys, off].set(k[:, 0])
     v_pages = cache["v_pages"].at[phys, off].set(v[:, 0])
-    # gather-based attention: logical-order pages -> (B, max_pages*page, ...)
-    kg = k_pages[page_table]  # (B, max_pages, page, Hkv, dh)
-    vg = v_pages[page_table]
-    maxp = page_table.shape[1]
-    kg = kg.reshape(B, maxp * page, cfg.n_kv_heads, cfg.d_head)
-    vg = vg.reshape(B, maxp * page, cfg.n_kv_heads, cfg.d_head)
-    # gathered keys sit at their absolute positions by construction
-    k_positions = jnp.broadcast_to(
-        jnp.arange(maxp * page, dtype=jnp.int32)[None], (B, maxp * page)
-    )
-    out = decode_attention(q, kg, vg, k_positions, seq_pos, window=None)
+    be = resolve_backend(cfg.decode_backend)
+    out = be.paged_attention_decode(q, k_pages, v_pages, page_table, seq_pos)
     out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
     return dense(cfg, out, p["wo"]), {"k_pages": k_pages, "v_pages": v_pages}
 
@@ -221,6 +235,12 @@ def paged_copy_page(cache: Dict, src, dst) -> Dict:
     one compiled shape.  Works on any pool whose leaves are
     ``(L, num_pages, page, ...)`` — dense/GQA K/V pages and MLA latent pages
     alike (the page axis is axis 1 after the layer stack).
+
+    This dense dynamic-slice copy is the ``"reference"`` backend's op; the
+    adapters dispatch through ``cfg.decode_backend``, and the pallas
+    backend replaces it with the scalar-prefetched single-page copy kernel
+    (:func:`repro.kernels.paged_attention.paged_copy`) — bit-exact either
+    way.
     """
     out = {}
     for name, pool in cache.items():
@@ -431,6 +451,44 @@ def _mla_qkv_latent(p, cfg: ModelConfig, x, positions):
 # _mla_expanded_attend — the engine's bit-exactness guarantee against the
 # static Server leans on the math being impossible to drift apart.
 
+def mla_latent_attend(q_lat, q_rope, ckv_c, kr_c, valid, *, scale):
+    """Latent-space MLA attention (the absorbed formulation's core).
+
+    ``q_lat``: (B, S, H, r) — q_nope already absorbed through ``W_kv_b``;
+    ``valid``: (B, K) key mask.  Returns the latent-space output ``o_lat``
+    (B, S, H, r) — the caller applies the value expansion.  This is the
+    ``"reference"`` backend's MLA decode read (over gathered latents); the
+    pallas kernel reproduces exactly this math page-by-page.
+    """
+    s = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_c,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshd,bkd->bhsk", q_rope, kr_c,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+    att = jax.nn.softmax(s, -1).astype(ckv_c.dtype)  # (B, H, S, K)
+    return jnp.einsum("bhsk,bkr->bshr", att, ckv_c)
+
+
+def mla_paged_gather_attend(q_lat, q_rope, ckv_pages, krope_pages,
+                            page_table, seq_pos, *, scale):
+    """The jnp gather->attend oracle over latent pages (reference op).
+
+    Gathers each slot's latent pages into logical order and scores with
+    :func:`mla_latent_attend`; gathered entries sit at their absolute
+    positions, so masking by ``k_pos <= seq_pos`` reproduces the linear
+    cache's valid set exactly.
+    """
+    B = q_lat.shape[0]
+    page, r_kv = ckv_pages.shape[1], ckv_pages.shape[2]
+    maxp = page_table.shape[1]
+    ckv_g = ckv_pages[page_table].reshape(B, maxp * page, r_kv)
+    kr_g = krope_pages[page_table].reshape(B, maxp * page, -1)
+    k_positions = jnp.arange(maxp * page, dtype=jnp.int32)
+    valid = k_positions[None] <= seq_pos[:, None]  # (B, K)
+    return mla_latent_attend(q_lat, q_rope, ckv_g, kr_g, valid, scale=scale)
+
+
 def _mla_absorbed_attend(cfg: ModelConfig, wkv_b, q_nope, q_rope,
                          ckv_c, kr_c, valid):
     """Absorbed-matmul MLA attention over a latent cache.
@@ -442,14 +500,7 @@ def _mla_absorbed_attend(cfg: ModelConfig, wkv_b, q_nope, q_rope,
     dn = cfg.qk_nope_dim
     scale = (dn + cfg.qk_rope_dim) ** -0.5
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkv_b[..., :dn])
-    s = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_c,
-                   preferred_element_type=jnp.float32)
-    s += jnp.einsum("bshd,bkd->bhsk", q_rope, kr_c,
-                    preferred_element_type=jnp.float32)
-    s *= scale
-    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
-    att = jax.nn.softmax(s, -1).astype(ckv_c.dtype)  # (B, H, S, K)
-    o_lat = jnp.einsum("bhsk,bkr->bshr", att, ckv_c)
+    o_lat = mla_latent_attend(q_lat, q_rope, ckv_c, kr_c, valid, scale=scale)
     return jnp.einsum("bshr,rhd->bshd", o_lat, wkv_b[..., dn:])  # value expand
 
 
@@ -550,12 +601,15 @@ def mla_paged_decode(
     """Absorbed-matmul decode against the latent page pool.
 
     Write: the new token's (c_kv, k_rope) lands in its slot's page.  Read:
-    gather the latent pages back into logical order and score via the
-    absorbed formulation — q_nope is folded into the latent space through
-    ``W_kv_b`` so attention runs over rank-r latents, never materializing
-    per-head K/V.  Gathered entries sit at their absolute positions, so
-    masking by ``k_pos <= seq_pos`` reproduces the linear cache's valid set
-    exactly (stale pages / partial-page tails mask out like empty slots).
+    through ``cfg.decode_backend``, always in the absorbed formulation —
+    q_nope is folded into the latent space through ``W_kv_b`` so attention
+    runs over rank-r latents, never materializing per-head K/V.  The
+    reference backend gathers the latent pages into logical order
+    (:func:`mla_paged_gather_attend`); the pallas backend streams them
+    page-by-page through the fused kernel.  Either way entries sit at
+    their absolute positions, so masking by ``k_pos <= seq_pos``
+    reproduces the linear cache's valid set exactly (stale pages /
+    partial-page tails mask out like empty slots).
     """
     B, S, _ = x.shape
     assert S == 1
@@ -573,13 +627,14 @@ def mla_paged_decode(
     ckv_pages = cache["ckv_pages"].at[phys, off].set(ckv[:, 0])
     krope_pages = cache["krope_pages"].at[phys, off].set(k_rope[:, 0])
 
-    maxp = page_table.shape[1]
-    ckv_g = ckv_pages[page_table].reshape(B, maxp * page, r_kv)
-    kr_g = krope_pages[page_table].reshape(B, maxp * page, cfg.qk_rope_dim)
-    # gathered keys sit at their absolute positions by construction
-    k_positions = jnp.arange(maxp * page, dtype=jnp.int32)
-    valid = k_positions[None] <= seq_pos[:, None]  # (B, K)
-    out = _mla_absorbed_attend(cfg, wkv_b, q_nope, q_rope, ckv_g, kr_g, valid)
+    scale = (dn + cfg.qk_rope_dim) ** -0.5
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkv_b[..., :dn])
+    be = resolve_backend(cfg.decode_backend)
+    o_lat = be.mla_paged_attention_decode(
+        q_lat, q_rope, ckv_pages, krope_pages, page_table, seq_pos,
+        scale=scale,
+    )
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, wkv_b[..., dn:])  # value expand
     out = out.reshape(B, 1, H * dv)
     return out @ p["wo"], {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
 

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.backend import resolve_backend
 from repro.distributed import axes as AX
 from repro.models import adapters as A
 from repro.models import model as M
@@ -213,6 +214,11 @@ def jitted_step_fns(cfg: ModelConfig) -> Dict[str, tuple]:
     and COW steps live with the pool they mutate
     (:func:`repro.serve.kvcache.install_step` /
     :func:`repro.serve.kvcache.cow_step`).
+
+    ``cfg.decode_backend`` selects the decode/COW execution path the steps
+    trace (jnp gather oracle vs fused pallas kernels) — pass a
+    ``dataclasses.replace(cfg, decode_backend="pallas")`` config to
+    inventory the kernelized hot loop.
     """
     from repro.serve import kvcache as KV
 
@@ -343,6 +349,13 @@ class EngineConfig:
     the adapter registry declares shareable (dense/GQA, MLA); stateful
     families (SWA rings, SSM rows, enc-dec) fall through to the unshared
     path, and MoE stacks alias pages but recompute every token.
+
+    ``backend`` selects the paged-decode execution path
+    (:func:`repro.core.backend.resolve_backend` name): ``"reference"``
+    keeps the jnp gather->attend decode and dense COW copy; ``"pallas"``
+    streams pages through the fused paged-attention / paged-copy kernels
+    (compiled on TPU, interpret mode elsewhere).  Folded into
+    ``cfg.decode_backend``, so every jitted step cache keys on it.
     """
 
     max_seqs: int = 4
@@ -354,6 +367,7 @@ class EngineConfig:
     prefill_tokens_per_step: int = 0  # 0: derive from the deprecated alias
     prefill_chunks_per_step: Optional[int] = None  # DEPRECATED alias
     prefix_sharing: bool = True
+    backend: str = "reference"  # paged-decode path: reference | pallas
     temperature: float = 0.0  # 0 = greedy
     eos_id: Optional[int] = None
     seed: int = 0
@@ -396,6 +410,13 @@ class Engine:
     """Continuous-batching serving engine (scheduler + paged KV cache)."""
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig, mesh=None):
+        # fold the backend selector into the frozen config: every memoized
+        # step jit (_decode_paged_fn, _cow_fn, ...) keys on the ModelConfig,
+        # so reference and pallas engines coexist without cache collisions.
+        # Resolve eagerly so an unknown name fails here, not mid-trace.
+        resolve_backend(ec.backend)
+        if ec.backend != cfg.decode_backend:
+            cfg = dataclasses.replace(cfg, decode_backend=ec.backend)
         self.cfg, self.params, self.ec, self.mesh = cfg, params, ec, mesh
         # unsupported families are refused by the PagedKVCache constructor
         # (before any pool is allocated), with the registry's family list

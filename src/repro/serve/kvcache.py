@@ -113,6 +113,15 @@ def _install_fn(cfg: ModelConfig):
 # traced scalars, so every COW event in a config's lifetime shares one
 # compiled shape.
 def cow_step(cfg: ModelConfig):
+    """The raw COW page-copy step (jitted with donation by `_cow_fn`).
+
+    Copies ``src`` -> ``dst`` in every *shareable paged* adapter's pools —
+    non-shareable pools (rings, SSM rows, cross rows) pass through
+    untouched.  Each adapter's ``copy_page`` dispatches on
+    ``cfg.decode_backend``: the reference path is a dense dynamic-slice
+    copy, the pallas path a scalar-prefetched single-page copy kernel;
+    both are bit-exact and keep the donated pool aliased in place.
+    """
     def copy(data, src, dst):
         out = {}
         for si, (kind, _n) in enumerate(M.layer_segments(cfg)):

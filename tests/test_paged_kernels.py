@@ -1,0 +1,174 @@
+"""Paged-decode kernel parity: fused Pallas kernels vs the jnp gather oracle.
+
+Kernel-level counterpart of the engine-level backend tests in
+``tests/test_serve.py``: each fused kernel (interpret mode on CPU — the
+identical grids/BlockSpecs the TPU lowering uses) is swept per page count
+and per ``seq_pos`` edge against the reference gather->attend functions it
+replaces.  Attention parity is gated at 1e-6 (online-softmax reassociation
+— the PR-1 BWMA tolerance); the COW page copy must be bit-exact.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import resolve_backend
+from repro.kernels.paged_attention import (
+    mla_paged_attention_decode,
+    paged_attention_decode,
+    paged_copy,
+)
+from repro.models.attention import (
+    mla_paged_gather_attend,
+    paged_gather_attend,
+)
+
+PAGE = 8
+MAXP = 4
+TOL = 1e-6
+
+
+def _table_and_pool(rng, B, maxp, used_pages, leaf_shapes):
+    """A paged layout: per-slot table rows mapping ``used_pages`` distinct
+    physical pages (page 0 is the null page, never mapped), plus random
+    pool leaves.  Unused table entries point at the null page like the
+    engine's reset rows."""
+    num_pages = B * maxp + 1
+    table = np.zeros((B, maxp), np.int32)
+    phys = rng.permutation(np.arange(1, num_pages))
+    k = 0
+    for b in range(B):
+        table[b, :used_pages] = phys[k:k + used_pages]
+        k += used_pages
+    pools = [
+        jnp.asarray(rng.standard_normal((num_pages,) + s), jnp.float32)
+        for s in leaf_shapes
+    ]
+    return jnp.asarray(table), pools
+
+
+def _edge_positions(used_pages):
+    """seq_pos edges within the last used page: page boundary start, an
+    interior partial fill, and the fully-written page."""
+    last = (used_pages - 1) * PAGE
+    return sorted({0, last, last + PAGE // 2, used_pages * PAGE - 1})
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+@pytest.mark.parametrize("used_pages", [1, 2, 4])
+def test_paged_decode_matches_gather(used_pages, groups):
+    rng = np.random.default_rng(used_pages * 10 + groups)
+    B, H, dh = 2, 4, 16
+    hkv = H // groups
+    table, (k_pages, v_pages) = _table_and_pool(
+        rng, B, MAXP, used_pages, [(PAGE, hkv, dh)] * 2
+    )
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    for pos in _edge_positions(used_pages):
+        seq_pos = jnp.full((B,), pos, jnp.int32)
+        ref = paged_gather_attend(q, k_pages, v_pages, table, seq_pos)
+        out = paged_attention_decode(
+            q, k_pages, v_pages, table, seq_pos, interpret=True
+        )
+        assert out.shape == ref.shape and out.dtype == ref.dtype
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err <= TOL, (used_pages, groups, pos, err)
+
+
+def test_paged_decode_ragged_positions():
+    """Slots at different fill levels in one batched call — each row masks
+    by its own seq_pos (null pages in unused table slots stay masked)."""
+    rng = np.random.default_rng(3)
+    B, H, dh = 3, 4, 16
+    table, (k_pages, v_pages) = _table_and_pool(
+        rng, B, MAXP, MAXP, [(PAGE, 2, dh)] * 2
+    )
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    seq_pos = jnp.asarray([0, PAGE - 1, MAXP * PAGE - 1], jnp.int32)
+    ref = paged_gather_attend(q, k_pages, v_pages, table, seq_pos)
+    out = paged_attention_decode(
+        q, k_pages, v_pages, table, seq_pos, interpret=True
+    )
+    assert float(jnp.max(jnp.abs(out - ref))) <= TOL
+
+
+@pytest.mark.parametrize("used_pages", [1, 2, 4])
+def test_mla_paged_decode_matches_gather(used_pages):
+    rng = np.random.default_rng(used_pages)
+    B, H, r, dr = 2, 4, 16, 8
+    scale = (24 + dr) ** -0.5  # absorbed qk_nope + rope dims, as in MLA
+    table, (ckv_pages, krope_pages) = _table_and_pool(
+        rng, B, MAXP, used_pages, [(PAGE, r), (PAGE, dr)]
+    )
+    q_lat = jnp.asarray(rng.standard_normal((B, 1, H, r)), jnp.float32)
+    q_rope = jnp.asarray(rng.standard_normal((B, 1, H, dr)), jnp.float32)
+    for pos in _edge_positions(used_pages):
+        seq_pos = jnp.full((B,), pos, jnp.int32)
+        ref = mla_paged_gather_attend(
+            q_lat, q_rope, ckv_pages, krope_pages, table, seq_pos,
+            scale=scale,
+        )
+        out = mla_paged_attention_decode(
+            q_lat, q_rope, ckv_pages, krope_pages, table, seq_pos,
+            scale=scale, interpret=True,
+        )
+        assert out.shape == ref.shape and out.dtype == ref.dtype
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err <= TOL, (used_pages, pos, err)
+
+
+def test_paged_copy_bit_exact():
+    """The COW kernel is a pure data movement: dst page becomes src page
+    bit-for-bit, every other page untouched, dtype preserved."""
+    rng = np.random.default_rng(7)
+    pool = jnp.asarray(
+        rng.standard_normal((3, 5, PAGE, 2, 6)), jnp.float32
+    )
+    out = paged_copy(pool, 1, 3, interpret=True)
+    expect = pool.at[:, 3].set(pool[:, 1])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    assert out.dtype == pool.dtype
+
+
+def test_paged_copy_survives_donating_jit():
+    """Inside a donating jit — the engine's COW step shape — the aliased
+    pool update stays bit-exact (and the alias is what jaxcheck RPJ101
+    budgets; here we only pin numerics)."""
+    rng = np.random.default_rng(8)
+    pool = jnp.asarray(rng.standard_normal((2, 4, PAGE, 3)), jnp.float32)
+    expect = pool.at[:, 2].set(pool[:, 1])
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(p, s, d):
+        return paged_copy(p, s, d, interpret=True)
+
+    out = step(pool, jnp.int32(1), jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_backend_dispatch_parity():
+    """The Backend protocol surface: reference and pallas backends agree on
+    all three paged operators, including the dict-of-pools COW copy."""
+    rng = np.random.default_rng(11)
+    B, H, dh = 2, 4, 16
+    table, (k_pages, v_pages) = _table_and_pool(
+        rng, B, MAXP, 2, [(PAGE, 2, dh)] * 2
+    )
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    seq_pos = jnp.asarray([5, 13], jnp.int32)
+    ref_be = resolve_backend("reference")
+    pal_be = resolve_backend("pallas")  # interpret auto-resolves off-TPU
+    a = ref_be.paged_attention_decode(q, k_pages, v_pages, table, seq_pos)
+    b = pal_be.paged_attention_decode(q, k_pages, v_pages, table, seq_pos)
+    assert float(jnp.max(jnp.abs(a - b))) <= TOL
+    # layer-stacked pools, page axis 1 — the adapters' COW layout
+    pools = {"k_pages": k_pages[None].repeat(2, 0),
+             "v_pages": v_pages[None].repeat(2, 0)}
+    got = pal_be.paged_copy_page(pools, 1, 2)
+    want = ref_be.paged_copy_page(pools, 1, 2)
+    assert set(got) == set(want)
+    for name in got:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]))

@@ -1222,6 +1222,123 @@ def test_prefill_chunks_per_step_deprecation_warning(monkeypatch):
     assert not rec  # one-shot: second use stays silent
 
 
+# --------------------------------------------------------------------------
+# Pallas paged-decode backend (fused kernels; interpret mode off-TPU)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunked", [True, False])
+def test_pallas_backend_matches_single_request(chunked):
+    """Dense/GQA engine under backend="pallas": the fused paged-attention
+    decode + COW kernels are a *data-movement* change, not a numerics
+    change — greedy tokens equal the single-request generate() baseline
+    exactly, including multi-chunk prompts and a slot re-fill."""
+    cfg = _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (12, 9, 14)]
+    max_new = 8
+    base = _single_request_baseline(cfg, params, prompts, max_new)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=32, page_size=8, chunked_prefill=chunked,
+        backend="pallas",
+    ))
+    assert eng.cfg.decode_backend == "pallas"  # folded into the jit key
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i, arrival_step=2 * i)
+    reqs = eng.run()
+    assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
+    for r, b in zip(reqs, base):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
+
+
+@pytest.mark.parametrize("chunked", [True, False])
+def test_pallas_backend_mla_matches_single_request(chunked):
+    """MLA under backend="pallas": absorbed-matmul decode over streamed
+    latent pages matches the single-request baseline token-for-token."""
+    cfg = _mla_dense_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (12, 9, 14)]
+    max_new = 8
+    base = _single_request_baseline(cfg, params, prompts, max_new)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=32, page_size=8, chunked_prefill=chunked,
+        backend="pallas",
+    ))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i, arrival_step=2 * i)
+    reqs = eng.run()
+    assert len(reqs) == 3 and all(r.state == "finished" for r in reqs)
+    for r, b in zip(reqs, base):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
+
+
+@pytest.mark.parametrize("mla", [False, True])
+def test_pallas_backend_cow_divergence(mla):
+    """Shared-prefix serving under backend="pallas": the COW copy runs
+    through the scalar-prefetched page-copy kernel and the post-divergence
+    decode reads through the fused attention kernel — outputs stay equal to
+    the baseline, and at least one COW actually fired."""
+    cfg = _mla_dense_cfg() if mla else _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+    pa = np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=(3,))
+                         ]).astype(np.int32)
+    pc = shared[:20].copy()  # partial tail page -> COW on first decode write
+    prompts = [pa, pc]
+    max_new = 8
+    base = _single_request_baseline(cfg, params, prompts, max_new)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=48, page_size=8, prefix_sharing=True,
+        backend="pallas",
+    ))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i, arrival_step=4 * i)
+    reqs = eng.run()
+    for r, b in zip(reqs, base):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+    assert eng.kv.cow_copies >= 1
+    assert [r.stats.cached_prompt_tokens for r in reqs] == [0, 20]
+    assert _idle_pages(eng.kv) == eng.kv.allocator.num_pages - 1
+
+
+def test_pallas_backend_ring_swa_fallback_unchanged():
+    """Families without paged decode (SWA ring buffer) ignore the backend
+    selector: backend="pallas" still runs the ring path and stays
+    bit-identical to the baseline."""
+    cfg = C.get_config("h2o-danube-3-4b", smoke=True, dtype=jnp.float32)
+    cfg = dataclasses.replace(cfg, block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (12, 9)]
+    max_new = 8
+    base = _single_request_baseline(cfg, params, prompts, max_new)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_len=32, page_size=8, backend="pallas",
+    ))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i)
+    for r, b in zip(eng.run(), base):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), b)
+
+
+def test_engine_rejects_unknown_backend():
+    """An unknown backend name fails at Engine construction (eager
+    resolve), not mid-trace inside a jitted step."""
+    cfg = _paged_cfg(block=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="unknown backend"):
+        Engine(cfg, params, EngineConfig(
+            max_seqs=1, max_len=16, page_size=8, backend="cuda",
+        ))
+
+
 def test_make_requests_deterministic():
     a = make_requests(100, 5, mean_interarrival=3.0, seed=7)
     b = make_requests(100, 5, mean_interarrival=3.0, seed=7)
