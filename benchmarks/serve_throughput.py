@@ -38,10 +38,21 @@ paged-attention / COW kernels (interpret mode off-TPU) instead of the jnp
 gather oracle; the static baseline always serves through the reference
 path, so the parity check doubles as an engine-level backend gate.
 
+``--mesh DxM`` switches to the **tensor-parallel gate**: the same workload
+runs through the continuous engine once single-device and once sharded
+over a ``(data, model)`` mesh (simulate on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  The gates are
+deterministic, not wall-clock: the sharded run's greedy tokens must be
+bit-identical to the single-device run, and when the family's KV pool
+head-shards, the per-device pool bytes must be exactly ``total / TP`` —
+the memory claim tensor parallelism exists to deliver.  (Wall-clock does
+not improve on a simulated mesh: every "device" is a slice of one CPU.)
+
 Every mode also merges its results (ratios, TTFT, tok/s, pool stats) into
 the ``BENCH_serve.json`` artifact (``--bench-out``; keyed ``mode:arch``,
-with ``:pallas`` appended for non-reference backends so both runs coexist)
-— the machine-readable perf trajectory CI uploads per run.
+with ``:pallas`` appended for non-reference backends and ``:mesh=DxM``
+for sharded runs so every variant coexists) — the machine-readable perf
+trajectory CI uploads per run.
 
 Usage:  PYTHONPATH=src:. python benchmarks/serve_throughput.py [--arch ...]
 """
@@ -87,7 +98,9 @@ def _write_bench(args, mode: str, payload: dict) -> None:
     key = f"{mode}:{args.arch}"
     if args.backend != "reference":
         key += f":{args.backend}"
-    doc[key] = {"backend": args.backend, **payload}
+    if args.mesh:
+        key += f":mesh={args.mesh}"
+    doc[key] = {"backend": args.backend, "mesh": args.mesh, **payload}
     with open(args.bench_out, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
     print(f"# bench artifact [{key}] -> {args.bench_out}")
@@ -111,7 +124,7 @@ def _run_static(cfg, params, reqs, args, max_len):
     return outs, wall, slot_steps
 
 
-def _run_continuous(cfg, params, reqs, args, max_len):
+def _run_continuous(cfg, params, reqs, args, max_len, mesh=None):
     # chunk granularity trades admission latency for dispatch overhead: the
     # throughput gate uses a few pages per chunk (vLLM-style budget) so the
     # comparison measures scheduling, not per-chunk fixed costs at smoke
@@ -121,7 +134,7 @@ def _run_continuous(cfg, params, reqs, args, max_len):
         max_seqs=args.max_seqs, max_len=max_len,
         page_size=args.page_size, seed=args.seed,
         prefill_chunk=args.prefill_chunk, backend=args.backend,
-    ))
+    ), mesh=mesh)
     for r in reqs:
         eng.submit(r["prompt"], r["max_new_tokens"],
                    rid=r["rid"], arrival_step=r["arrival_step"])
@@ -136,6 +149,8 @@ def _run_continuous(cfg, params, reqs, args, max_len):
         "preemptions": sum(r.stats.n_preemptions for r in done),
         "page_size": eng.kv.page_size,
         "cache_mb": eng.kv.cache_bytes() / 1e6,
+        "cache_bytes": eng.kv.cache_bytes(),
+        "cache_bytes_per_device": eng.kv.cache_bytes_per_device(),
         "pool": eng.kv.pool_stats(),
     }
     return outs, wall, stats
@@ -323,6 +338,75 @@ def run_shared_prefix(scale: float, args):
     return sh_ttft, un_ttft, saved, match
 
 
+def run_mesh(scale: float, args):
+    """The tensor-parallel gate: sharded engine vs single-device parity.
+
+    Both gates are deterministic, so the smoke shape is the right one: the
+    scaled threaded-matmul shape can flip a near-tie argmax between
+    batchings, and wall-clock says nothing on a simulated mesh (every
+    "device" is a slice of one CPU).  What must hold exactly: bit-identical
+    greedy tokens, and per-device pool bytes == total / TP whenever the
+    family's KV pool head-shards on the model axis (MLA latent pools
+    replicate by design and must stay byte-identical per device).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as SH
+    from repro.launch.mesh import make_serve_mesh
+
+    mesh = make_serve_mesh(args.mesh)
+    tp = mesh.shape["model"]
+    print("# serve mesh: tensor-parallel continuous engine vs single-device "
+          f"(arch={args.arch}, mesh={args.mesh}, backend={args.backend}, "
+          f"{args.num_requests} requests)")
+    cfg = C.get_config(args.arch, smoke=True, dtype=jnp.float32)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = make_requests(
+        cfg.vocab_size, args.num_requests,
+        prompt_len=args.prompt_len, max_new=args.max_new,
+        mean_interarrival=args.mean_interarrival, seed=args.seed,
+    )
+    max_len = args.prompt_len + args.max_new + 1
+    base_out, _, _base = _run_continuous(cfg, params, reqs, args, max_len)
+    mesh_out, _, sharded = _run_continuous(
+        cfg, params, reqs, args, max_len, mesh=mesh
+    )
+    match = all(
+        np.array_equal(base_out[r["rid"]], mesh_out[r["rid"]]) for r in reqs
+    )
+    total = sharded["cache_bytes"]
+    per_dev = sharded["cache_bytes_per_device"]
+    # expectation from the adapter registry's own specs: does this family's
+    # pool carry the model axis at all?
+    pools = jax.eval_shape(lambda: M.init_paged_cache(
+        cfg, args.max_seqs, 1, args.page_size, max_len
+    ))
+    specs = jax.tree.leaves(
+        SH.paged_cache_pspecs(cfg, mesh, pools),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    head_sharded = any("model" in tuple(s) for s in specs)
+    expect = total // tp if head_sharded else total
+    emit("serve/mesh/parity", float(match), f"mesh={args.mesh} tp={tp}")
+    emit("serve/mesh/pool_bytes_per_device", per_dev,
+         f"total={total} expected={expect} head_sharded={head_sharded}")
+    print(f"# sharded greedy parity: {match}; pool {total} B total -> "
+          f"{per_dev} B/device (expected {expect}, tp={tp}, "
+          f"head-sharded={head_sharded})")
+    _write_bench(args, "mesh", {
+        "outputs_match": match,
+        "tp": tp,
+        "pool_bytes_total": total,
+        "pool_bytes_per_device": per_dev,
+        "pool_bytes_per_device_expected": expect,
+        "pool_head_sharded": head_sharded,
+        "slot_steps": sharded["slot_steps"],
+        "preemptions": sharded["preemptions"],
+        "page_size": sharded["page_size"],
+    })
+    return match, per_dev, expect
+
+
 def run(scale: float = 1.0, argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm-2b")
@@ -346,6 +430,12 @@ def run(scale: float = 1.0, argv=None):
                          "jnp gather oracle or the fused paged-attention / "
                          "COW kernels (compiled on TPU, interpret mode "
                          "elsewhere).  Recorded in the bench artifact")
+    ap.add_argument("--mesh", default="",
+                    help="DxM mesh spec (e.g. 1x2): run the tensor-parallel "
+                         "gate instead — sharded-vs-single-device greedy "
+                         "parity + per-device pool bytes.  Needs D*M visible "
+                         "devices (simulate with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N)")
     ap.add_argument("--long-prompt", action="store_true",
                     help="run the chunked-admission stall gate instead")
     ap.add_argument("--long-prompt-len", type=int, default=512)
@@ -363,6 +453,8 @@ def run(scale: float = 1.0, argv=None):
     if args.family:
         args.arch = FAMILY_ARCHS[args.family]
 
+    if args.mesh:
+        return run_mesh(scale, args), None, "mesh"
     if args.long_prompt:
         return run_long_prompt(scale, args), None, None
     if args.shared_prefix:
@@ -454,6 +546,21 @@ if __name__ == "__main__":
     # on a shared runner is not, so the paired-median ratio only fails on a
     # clear regression; typical measured margin is 1.2-2.2x.
     speedup, ct_steps, st_steps = run()
+    if st_steps == "mesh":
+        # deterministic, so both gates are hard: the sharded engine must
+        # reproduce the single-device greedy stream bit for bit, and the
+        # per-device pool bytes must match the registry's sharding specs
+        # (total/TP when head-sharded, total when replicated).
+        match, per_dev, expect = speedup
+        if not match:
+            raise SystemExit(
+                "sharded greedy outputs diverged from single-device"
+            )
+        if per_dev != expect:
+            raise SystemExit(
+                f"per-device pool bytes {per_dev} != expected {expect}"
+            )
+        raise SystemExit(0)
     if st_steps == "shared-prefix":
         # deterministic step/page accounting, so the gates are hard: the
         # shared run must admit later requests to their first token sooner

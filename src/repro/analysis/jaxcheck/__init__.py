@@ -28,6 +28,12 @@ rule id      what it catches
              cache entries than the declared signature count
 ``RPJ105``   memory-budget regression: ``compiled.memory_analysis()``
              temp/argument/output bytes over the checked-in budget
+``RPJ106``   collective-traffic budget: cross-device collectives
+             (all-reduce / all-gather / reduce-scatter / all-to-all /
+             collective-permute) GSPMD inserted into a *sharded* step's
+             compiled module, summed by payload bytes — a sharding change
+             that silently all-gathers the KV pool every decode step is a
+             wire-traffic regression no single-device analysis can see
 ===========  ==================================================================
 
 Budgets and waivers live in the checked-in ``jaxcheck.budgets`` file
@@ -59,7 +65,7 @@ __all__ = [
     "format_budgets",
 ]
 
-RULE_IDS = ("RPJ101", "RPJ102", "RPJ103", "RPJ104", "RPJ105")
+RULE_IDS = ("RPJ101", "RPJ102", "RPJ103", "RPJ104", "RPJ105", "RPJ106")
 
 RULE_DOCS = {
     "RPJ101": "donation-effectiveness: donated buffer not in input_output_aliases",
@@ -67,6 +73,7 @@ RULE_DOCS = {
     "RPJ103": "dtype-promotion drift: upcast past the planned widest dtype",
     "RPJ104": "retrace-closure: jit signature outside the enumerated key set",
     "RPJ105": "memory-budget regression: compiled memory over checked-in budget",
+    "RPJ106": "collective-traffic budget: sharded-step collective bytes over budget",
 }
 
 #: memory_analysis fields gated by RPJ105 (alias/codegen sizes are recorded

@@ -50,8 +50,14 @@ def main(argv=None) -> int:
                     choices=("reference", "pallas"),
                     help="decode/COW path the primary decode_step and "
                          "cow_copy specs compile (default: pallas)")
-    ap.add_argument("--budgets", default="jaxcheck.budgets",
-                    help="budgets/waivers file (default: ./jaxcheck.budgets)")
+    ap.add_argument("--mesh", default="",
+                    help="DxM mesh spec (e.g. 1x2): compile the SHARDED "
+                         "inventory — needs D*M visible devices (simulate "
+                         "with XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N) and gates RPJ106 collective budgets")
+    ap.add_argument("--budgets", default=None,
+                    help="budgets/waivers file (default: ./jaxcheck.budgets, "
+                         "or ./jaxcheck_mesh.budgets under --mesh)")
     ap.add_argument("--write-budgets", action="store_true",
                     help="measure and (re)write the budgets file, keep waivers")
     ap.add_argument("--select", nargs="+", choices=RULE_IDS, default=None,
@@ -68,12 +74,16 @@ def main(argv=None) -> int:
 
     geometry = InventoryConfig(
         arch=args.arch, max_seqs=args.max_seqs, max_len=args.max_len,
-        page_size=args.page_size, backend=args.backend,
+        page_size=args.page_size, backend=args.backend, mesh=args.mesh,
     )
     inv = serving_inventory(geometry)
     steps = [compile_step(spec) for spec in inv.specs]
     measured = {cs.name: measure(cs) for cs in steps}
-    budgets_path = Path(args.budgets)
+    # mesh budgets live in their own file: the sharded modules' sizes (and
+    # collectives) are a different baseline than the single-device ones
+    budgets_path = Path(args.budgets or (
+        "jaxcheck_mesh.budgets" if args.mesh else "jaxcheck.budgets"
+    ))
 
     if args.write_budgets:
         tolerance, widest, waivers = DEFAULT_TOLERANCE, DEFAULT_WIDEST, None
@@ -112,6 +122,7 @@ def main(argv=None) -> int:
             "geometry": {
                 "max_seqs": args.max_seqs, "max_len": args.max_len,
                 "page_size": args.page_size, "backend": args.backend,
+                "mesh": args.mesh,
             },
             "chunk_size": inv.chunk_size,
             "chunk_closure": list(inv.chunk_closure),

@@ -55,6 +55,11 @@ class StepSpec:
     #: emit, and the closed set they must stay inside
     signature_plan: Optional[Sequence[Any]] = None
     signature_closure: Optional[Sequence[Any]] = None
+    #: mesh inventory (sjit): per-argument / per-output NamedSharding trees
+    #: passed through to lowering, so the compiled artifact is the real
+    #: GSPMD-partitioned module (whose collectives RPJ106 budgets)
+    in_shardings: Any = None
+    out_shardings: Any = None
 
 
 @dataclasses.dataclass
@@ -159,6 +164,66 @@ def parse_aliased_params(hlo_text: str) -> FrozenSet[int]:
     return frozenset()
 
 
+# ---------------------------------------------------------------------------
+# Collective extraction (compiled HLO text)
+# ---------------------------------------------------------------------------
+#
+# GSPMD inserts cross-device collectives during SPMD partitioning, AFTER
+# lowering — they exist only in the compiled module, never in the jaxpr, so
+# unlike gathers/converts they must be read off ``compiled.as_text()``.
+
+_COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+#: HLO dtype token -> itemsize (collective payloads only carry these)
+_HLO_ITEMSIZE = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_HLO_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_HLO_EQN_RE = re.compile(r"=\s+(\(?[^)=]*?\)?)\s+([a-z][a-z0-9-]*)\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of an HLO shape string (tuples sum their elements)."""
+    total = 0
+    for dtype, dims in _HLO_SHAPE_RE.findall(shape_text):
+        if dtype not in _HLO_ITEMSIZE:
+            continue  # token/opaque shapes carry no payload
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _HLO_ITEMSIZE[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> List[Dict[str, Any]]:
+    """Every collective op in a compiled module's HLO text: (op, output
+    bytes).  Async pairs count once — the ``-start`` op carries the shape,
+    the ``-done`` is skipped."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _HLO_EQN_RE.search(line)
+        if m is None:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op[: -len("-start")] if op.endswith("-start") else op
+        if base not in _COLLECTIVE_OPS:
+            continue
+        out.append({"op": base, "output_bytes": _shape_bytes(shape_text)})
+    return out
+
+
 def _leaf_label(path) -> str:
     return jax.tree_util.keystr(path)
 
@@ -193,6 +258,8 @@ def compile_step(spec: StepSpec) -> CompiledStep:
     artifact = lower_and_compile(
         spec.fn,
         spec.args,
+        in_shardings=spec.in_shardings,
+        out_shardings=spec.out_shardings,
         donate_argnums=spec.donate_argnums,
         keep_unused=True,
     )
@@ -214,5 +281,8 @@ def measure(cs: CompiledStep) -> Dict[str, int]:
     record = dict(cs.memory)
     record["max_gather_bytes"] = max(
         (g["output_bytes"] for g in gathers), default=0
+    )
+    record["collective_bytes"] = sum(
+        c["output_bytes"] for c in collective_stats(cs.artifact.hlo_text())
     )
     return record

@@ -49,6 +49,13 @@ class InventoryConfig:
     #: arrangement argument predicts.  The jnp oracle path stays gated as
     #: ``decode_step_reference`` / ``cow_copy_reference``.
     backend: str = "pallas"
+    #: ``DxM`` mesh spec (e.g. ``"1x2"``): compile the SHARDED inventory —
+    #: every spec carries the engine's real in/out shardings (resident-TP
+    #: params, head-sharded pools, replicated host-fed inputs) and traces
+    #: under the mesh, so RPJ101 proves donation survives sharding and
+    #: RPJ106 budgets the partitioned module's collective traffic.  Needs
+    #: D*M visible devices; empty = single-device inventory.
+    mesh: str = ""
 
 
 @dataclasses.dataclass
@@ -232,7 +239,46 @@ def serving_inventory(inv: Optional[InventoryConfig] = None) -> Inventory:
         donate_argnums=install_donate,
     ))
 
+    # -- sharded inventory: attach the engine's real mesh shardings ---------
+    if inv.mesh:
+        _shard_specs(cfg, inv.mesh, params, caches, specs)
+
     return Inventory(
         cfg=cfg, geometry=inv, specs=specs, chunk_size=chunk_size,
         chunk_closure=closure, chunk_plans=plans,
     )
+
+
+def _shard_specs(cfg, mesh_spec: str, params, caches, specs) -> None:
+    """Turn the single-device specs into the mesh inventory, in place.
+
+    Mirrors exactly what :class:`repro.serve.engine.Engine` builds on a
+    mesh: resident-TP weights, adapter-registry pool placement, replicated
+    host-fed inputs, explicit out shardings so donation composes — and the
+    step bodies wrapped in :func:`repro.distributed.axes.traced_under` so
+    activation constraints and the pallas shard_map dispatch see the policy
+    at trace time.  The compiled artifacts are then the true partitioned
+    modules RPJ101 (donation survives sharding) and RPJ106 (collective
+    traffic) gate.
+    """
+    from repro.distributed import axes as AX
+    from repro.distributed import sharding as SH
+    from repro.launch.mesh import make_serve_mesh
+
+    mesh = make_serve_mesh(mesh_spec)
+    SH.validate_paged_sharding(cfg, mesh)
+    param_sh, pool_sh, rep = SH.serve_shardings(cfg, mesh, params, caches)
+    by_step = {
+        "decode_step": (
+            (param_sh, pool_sh, rep, rep, rep, rep), (rep, rep, pool_sh)
+        ),
+        "prefill_chunk": ((param_sh, pool_sh) + (rep,) * 7, (rep, pool_sh)),
+        "cow_copy": ((pool_sh, rep, rep), pool_sh),
+        "install": ((pool_sh, rep, rep, rep, rep), pool_sh),
+    }
+    for spec in specs:
+        for prefix, (ins, outs) in by_step.items():
+            if spec.name.startswith(prefix):
+                spec.in_shardings, spec.out_shardings = ins, outs
+                break
+        spec.fn = AX.traced_under(mesh, spec.fn)

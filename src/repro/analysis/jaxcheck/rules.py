@@ -1,4 +1,4 @@
-"""RPJ101–RPJ105: the compiled-artifact rules.
+"""RPJ101–RPJ106: the compiled-artifact rules.
 
 Each rule is ``rule(steps, inv, budgets) -> List[Finding]`` over the
 compiled inventory (:class:`harness.CompiledStep`); waivers from the
@@ -17,6 +17,7 @@ import numpy as np
 from repro.analysis.jaxcheck import RULE_IDS, Budgets, Finding
 from repro.analysis.jaxcheck.harness import (
     CompiledStep,
+    collective_stats,
     convert_stats,
     gather_stats,
 )
@@ -157,12 +158,49 @@ def rule_rpj105(steps, inv, budgets) -> List[Finding]:
     return out
 
 
+def rule_rpj106(steps, inv, budgets) -> List[Finding]:
+    """Collective-traffic budget: the cross-device collectives GSPMD
+    partitioned into a sharded step's compiled module (all-reduce /
+    all-gather / reduce-scatter / all-to-all / collective-permute), summed
+    by payload bytes, must stay under the step's ``collective_bytes``
+    budget.  The hazard this pins down: a sharding change that silently
+    all-gathers the head-sharded KV pool (or the weights) every decode
+    step — per-step wire traffic invisible to every single-device check.
+    Steps with no collectives (single-device inventories) pass without a
+    budget."""
+    out = []
+    for cs in steps:
+        colls = collective_stats(cs.artifact.hlo_text())
+        if not colls:
+            continue
+        total = sum(c["output_bytes"] for c in colls)
+        ops = {}
+        for c in colls:
+            ops[c["op"]] = ops.get(c["op"], 0) + 1
+        kinds = ", ".join(f"{n}x {op}" for op, n in sorted(ops.items()))
+        budget = budgets.budget(cs.name, "collective_bytes")
+        if budget is None:
+            out.append(Finding(
+                "RPJ106", cs.name,
+                f"{len(colls)} collective(s) ({kinds}) moving {total} B "
+                f"but no collective_bytes budget — run --write-budgets",
+            ))
+        elif not budgets.allowed(cs.name, "collective_bytes", total):
+            out.append(Finding(
+                "RPJ106", cs.name,
+                f"collective traffic {total} B ({kinds}) exceeds budget "
+                f"{budget} B (+{budgets.tolerance:.0%} tolerance)",
+            ))
+    return out
+
+
 RULES: Dict[str, Callable] = {
     "RPJ101": rule_rpj101,
     "RPJ102": rule_rpj102,
     "RPJ103": rule_rpj103,
     "RPJ104": rule_rpj104,
     "RPJ105": rule_rpj105,
+    "RPJ106": rule_rpj106,
 }
 assert tuple(RULES) == RULE_IDS
 

@@ -20,6 +20,9 @@ rule id      what it catches
 ``RPR006``   explicit device->host transfer (``jax.device_get`` /
              ``.block_until_ready()`` / ``np.array(...)``) inside a
              ``# repro: hot-loop`` function
+``RPR007``   hard-coded device selection in the serving stack
+             (``jax.devices()[0]`` / ``jax.local_devices()[i]`` /
+             ``jax.device_put`` without a sharding under ``src/repro/serve``)
 ===========  ==================================================================
 
 Suppression pragmas (trailing comments):
@@ -59,7 +62,9 @@ __all__ = [
     "RULE_DOCS",
 ]
 
-RULE_IDS = ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006")
+RULE_IDS = (
+    "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007",
+)
 
 RULE_DOCS = {
     "RPR001": "use-after-donation: donated buffer read again before rebinding",
@@ -68,6 +73,7 @@ RULE_DOCS = {
     "RPR004": "layer-family branch outside the adapter registry",
     "RPR005": "stray print / jax.debug.print / breakpoint() in src/",
     "RPR006": "explicit device->host transfer in a `# repro: hot-loop` function",
+    "RPR007": "hard-coded device selection / unsharded device_put in serve/",
 }
 
 

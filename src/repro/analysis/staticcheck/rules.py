@@ -538,6 +538,64 @@ def rule_rpr006(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
     return findings
 
 
+# ---------------------------------------------------------------------------
+# RPR007 — hard-coded device selection in the serving stack
+# ---------------------------------------------------------------------------
+#
+# The engine places buffers through the mesh/sharding registry
+# (`repro.distributed.sharding`); code under `src/repro/serve` that indexes
+# the global device list (`jax.devices()[0]`, `jax.local_devices()[i]`) or
+# calls `jax.device_put(x)` with no sharding/device pins work to one chip and
+# silently breaks the tensor-parallel path — on a mesh the buffer lands
+# replicated on device 0 and every collective downstream degenerates.
+# `jax.device_put(x, sharding)` (second positional arg or `device=`) is the
+# sanctioned form and is not flagged.
+
+_DEVICE_LIST_CALLS = {"jax.devices", "jax.local_devices"}
+
+
+def _in_serve_tree(path: str) -> bool:
+    parts = Path(path).parts
+    return "src" in parts and "serve" in parts
+
+
+def rule_rpr007(tree: ast.AST, ctx: RuleContext) -> List[Finding]:
+    if not _in_serve_tree(ctx.path):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Call)
+            and _dotted(node.value.func) in _DEVICE_LIST_CALLS
+        ):
+            findings.append(
+                ctx.finding(
+                    "RPR007",
+                    node,
+                    f"`{_dotted(node.value.func)}()[...]` hard-codes a device "
+                    "in the serving stack; place buffers through a "
+                    "NamedSharding from repro.distributed.sharding",
+                )
+            )
+        elif (
+            isinstance(node, ast.Call)
+            and _dotted(node.func) == "jax.device_put"
+            and len(node.args) < 2
+            and not any(kw.arg == "device" for kw in node.keywords)
+        ):
+            findings.append(
+                ctx.finding(
+                    "RPR007",
+                    node,
+                    "`jax.device_put` without a sharding defaults to the "
+                    "first device; pass a NamedSharding so the placement "
+                    "follows the mesh",
+                )
+            )
+    return findings
+
+
 RULES: Dict[str, Callable[[ast.AST, RuleContext], List[Finding]]] = {
     "RPR001": rule_rpr001,
     "RPR002": rule_rpr002,
@@ -545,4 +603,5 @@ RULES: Dict[str, Callable[[ast.AST, RuleContext], List[Finding]]] = {
     "RPR004": rule_rpr004,
     "RPR005": rule_rpr005,
     "RPR006": rule_rpr006,
+    "RPR007": rule_rpr007,
 }

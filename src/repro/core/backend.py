@@ -43,6 +43,12 @@ from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 import jax
 
+try:  # moved out of experimental in newer jax
+    from jax.shard_map import shard_map
+except ImportError:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as _P
+
 from repro.core import blockwise as bw
 from repro.core.blockwise import Blocked
 from repro.kernels.bwma_attention import bwma_attention
@@ -236,8 +242,37 @@ class PallasBackend(_ElementwiseMixin):
     def transpose(self, a: Blocked) -> Blocked:
         return self._transpose(a)
 
+    # -- tensor-parallel dispatch: a pallas_call cannot be auto-partitioned
+    # -- by GSPMD, so under an active TP shard policy (the engine's
+    # -- mesh-traced steps install one) the paged kernels run PER SHARD via
+    # -- shard_map with the head axis pre-partitioned.  Attention is
+    # -- head-independent, so the per-shard online softmax is bit-identical
+    # -- to the unsharded kernel on each head — the streamed pages never
+    # -- cross devices and no collective is inserted here (only the
+    # -- post-attention row-parallel projection all-reduces, outside).
+
+    @staticmethod
+    def _tp_policy(*head_counts):
+        """The active TP policy when the head axes can shard, else None."""
+        from repro.distributed import axes as AX
+
+        pol = AX.current()
+        if (pol is not None and pol.mesh is not None and pol.tp_size > 1
+                and all(h % pol.tp_size == 0 for h in head_counts)):
+            return pol
+        return None
+
     def paged_attention_decode(self, q, k_pages, v_pages, page_table,
                                seq_pos):
+        pol = self._tp_policy(q.shape[2], k_pages.shape[2])
+        if pol is not None:
+            tp = pol.tp_axis
+            head = _P(None, None, tp, None)
+            return shard_map(
+                self._paged_attention_decode, mesh=pol.mesh,
+                in_specs=(head, head, head, _P(), _P()),
+                out_specs=head, check_rep=False,
+            )(q, k_pages, v_pages, page_table, seq_pos)
         return self._paged_attention_decode(
             q, k_pages, v_pages, page_table, seq_pos
         )
@@ -245,16 +280,41 @@ class PallasBackend(_ElementwiseMixin):
     def mla_paged_attention_decode(self, q_lat, q_rope, ckv_pages,
                                    krope_pages, page_table, seq_pos, *,
                                    scale):
+        pol = self._tp_policy(q_lat.shape[2])
+        if pol is not None:
+            # latent pages carry no head axis: they stay replicated and each
+            # device attends its own query heads against the full pools
+            head = _P(None, None, pol.tp_axis, None)
+            return shard_map(
+                functools.partial(
+                    self._mla_paged_attention_decode, scale=scale
+                ),
+                mesh=pol.mesh,
+                in_specs=(head, head, _P(), _P(), _P(), _P()),
+                out_specs=head, check_rep=False,
+            )(q_lat, q_rope, ckv_pages, krope_pages, page_table, seq_pos)
         return self._mla_paged_attention_decode(
             q_lat, q_rope, ckv_pages, krope_pages, page_table, seq_pos,
             scale=scale,
         )
 
     def paged_copy_page(self, pools: Dict, src, dst) -> Dict:
-        return {
-            name: self._paged_copy(pool, src, dst)
-            for name, pool in pools.items()
-        }
+        out = {}
+        for name, pool in pools.items():
+            # stacked dense/GQA pools (L, pages, page, Hkv, dh) COW-copy per
+            # head shard; headless pools (MLA latent) copy replicated
+            pol = (self._tp_policy(pool.shape[3])
+                   if pool.ndim == 5 else None)
+            if pol is not None:
+                spec = _P(None, None, None, pol.tp_axis, None)
+                out[name] = shard_map(
+                    self._paged_copy, mesh=pol.mesh,
+                    in_specs=(spec, _P(), _P()),
+                    out_specs=spec, check_rep=False,
+                )(pool, src, dst)
+            else:
+                out[name] = self._paged_copy(pool, src, dst)
+        return out
 
 
 BACKENDS: Dict[str, Callable[..., Backend]] = {

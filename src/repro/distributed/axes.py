@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -51,6 +52,10 @@ class ShardPolicy:
     tp_size: int
     ep_axes: tuple = ()   # innermost-data x model (full expert parallelism)
     ep_size: int = 1
+    # the concrete Mesh the policy was derived from — needed by trace-time
+    # consumers that must name a mesh explicitly (shard_map around the
+    # pallas paged-decode kernels).  None under AbstractMesh validation.
+    mesh: object = dataclasses.field(default=None, compare=False)
 
 
 _CURRENT: Optional[ShardPolicy] = None
@@ -76,11 +81,29 @@ def policy(mesh):
         tp_size=mesh.shape[tp] if tp else 1,
         ep_axes=ep,
         ep_size=(mesh.shape[dp[-1]] * mesh.shape[tp]) if ep else 1,
+        mesh=mesh if isinstance(mesh, jax.sharding.Mesh) else None,
     )
     try:
         yield _CURRENT
     finally:
         _CURRENT = prev
+
+
+def traced_under(mesh, fn):
+    """Wrap ``fn`` so its BODY runs under ``with mesh, policy(mesh)``.
+
+    ``jax.jit`` traces lazily at the first call, so a mesh/policy context
+    installed around jit *construction* is gone by trace time and every
+    :func:`constrain` inside the model silently no-ops.  Wrapping the
+    function body instead puts the context where tracing actually happens —
+    the engine's sharded step closures are all built through here.
+    """
+    @functools.wraps(fn)
+    def run(*args, **kwargs):
+        with mesh, policy(mesh):
+            return fn(*args, **kwargs)
+
+    return run
 
 
 def constrain(x, dims: Sequence[Optional[str]]):

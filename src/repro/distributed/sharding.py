@@ -280,6 +280,94 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Any:
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 
 
+def paged_cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape=None) -> Any:
+    """PartitionSpec pytree for the engine's **L-stacked paged cache pools**
+    (the ``init_paged_cache`` tree: ``seg{i} -> adapter.key -> pool leaf``).
+
+    Placement is each family's cache adapter's business
+    (:meth:`repro.models.adapters.CacheAdapter.pool_pspecs`): dense/GQA and
+    ring/cross pools shard their kv-head axis over the model axis when it
+    divides; MLA latent pools replicate (no head axis); SSM state rows
+    replicate.  Page tables and free lists are host-side and never enter
+    this tree.  ``cache_shape`` (any pytree with the pool leaf names — real
+    arrays, ``eval_shape`` output...) is optional: without it the leaf
+    names are recovered from an ``eval_shape`` of each adapter's pool.
+    """
+    from repro.models import adapters as A
+
+    ax = MeshAxes.from_mesh(mesh)
+    tp_size = _axis_size(mesh, ax.tp)
+
+    def leaf_names(si: int, ad) -> Tuple[str, ...]:
+        if cache_shape is not None:
+            return tuple(cache_shape[f"seg{si}"][ad.key])
+        geom = A.CacheGeometry(max_seqs=1, num_pages=2,
+                               page_size=cfg.block, max_len=cfg.block)
+        return tuple(jax.eval_shape(lambda: ad.init_pool(cfg, geom)))
+
+    out: Dict[str, Any] = {}
+    for si, (kind, _n) in enumerate(A.layer_segments(cfg)):
+        seg: Dict[str, Any] = {}
+        for ad in A.adapters_for(cfg, kind):
+            specs = ad.pool_pspecs(cfg, tp_axis=ax.tp, tp_size=tp_size)
+            seg[ad.key] = {
+                name: specs.get(name, P()) for name in leaf_names(si, ad)
+            }
+        out[f"seg{si}"] = seg
+    return out
+
+
+def validate_paged_sharding(cfg: ModelConfig, mesh: Mesh) -> None:
+    """Reject (config, mesh) pairs whose paged K/V head axis cannot shard.
+
+    Called at :class:`~repro.serve.engine.Engine` construction so a
+    non-dividing head count fails fast with an actionable message instead
+    of silently replicating the pools (or failing inside jit).  Families
+    without a head-axis pool (MLA latent, SSM rows) pass — their pools
+    replicate by design.
+    """
+    from repro.models import adapters as A
+
+    ax = MeshAxes.from_mesh(mesh)
+    tp_size = _axis_size(mesh, ax.tp)
+    if tp_size <= 1:
+        return
+    uses_paged_heads = any(
+        isinstance(ad, A.PagedAttnAdapter) for ad in A.all_adapters(cfg)
+    )
+    if uses_paged_heads and cfg.n_kv_heads % tp_size:
+        divisors = [m for m in range(1, cfg.n_kv_heads + 1)
+                    if cfg.n_kv_heads % m == 0]
+        raise ValueError(
+            f"{cfg.name}: n_kv_heads={cfg.n_kv_heads} is not divisible by "
+            f"the mesh's model-axis size {tp_size}, so the paged K/V pools "
+            f"cannot head-shard (they would silently replicate on every "
+            f"device).  Pick a mesh whose model axis divides n_kv_heads "
+            f"(valid TP sizes: {divisors}) or serve single-device."
+        )
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, params, cache_shape):
+    """The serving engine's NamedSharding bundle for one (config, mesh).
+
+    Returns ``(param_shardings, pool_shardings, replicated)`` — resident
+    2-D TP for the weights (``param_pspecs(mode="serve")``), the adapter
+    registry's pool placement for the L-stacked cache, and the replicated
+    sharding used for every small host-fed step input (tokens, positions,
+    page tables, scalars).
+    """
+    params_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    p_specs = param_pspecs(cfg, mesh, params_shape, mode="serve")
+    c_specs = paged_cache_pspecs(cfg, mesh, cache_shape)
+    return (
+        named(mesh, p_specs),
+        named(mesh, c_specs),
+        NamedSharding(mesh, P()),
+    )
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

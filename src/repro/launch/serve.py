@@ -21,6 +21,13 @@ Pallas kernels (compiled on TPU, interpret mode elsewhere):
   PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
       --num-requests 6 --max-seqs 2 --backend pallas
 
+``--mesh DxM`` serves tensor-parallel over a ``(data, model)`` device mesh:
+resident sharded weights, head-sharded KV pools, sharded jitted steps
+(simulate on CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
+      --num-requests 6 --max-seqs 2 --mesh 1x2
+
 Legacy single-wave batched generation (also the only path for the vision
 frontend, which the adapter registry does not cover yet):
 
@@ -51,12 +58,13 @@ from repro.serve import (
 )
 
 
-def run_single_wave(cfg, params, args):
+def run_single_wave(cfg, params, args, mesh=None):
     """Legacy path: one batch, one wave (works for every cache family)."""
     srv = Server(
         cfg, params,
         ServeConfig(max_len=args.prompt_len + args.max_new + 8,
                     temperature=args.temperature),
+        mesh=mesh,
     )
     toks = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
@@ -70,7 +78,7 @@ def run_single_wave(cfg, params, args):
     print(out[:, :16])
 
 
-def run_workload(cfg, params, args):
+def run_workload(cfg, params, args, mesh=None):
     """Multi-request workload through the selected engine(s)."""
     reqs = make_requests(
         cfg.vocab_size, args.num_requests,
@@ -83,7 +91,7 @@ def run_workload(cfg, params, args):
     if args.engine in ("static", "both"):
         srv = Server(cfg, params, ServeConfig(
             max_len=max_len, temperature=args.temperature, seed=args.seed,
-        ))
+        ), mesh=mesh)
         t0 = time.time()
         outs = run_static_waves(srv, reqs, args.max_seqs)
         dt = time.time() - t0
@@ -103,7 +111,7 @@ def run_workload(cfg, params, args):
             backend=args.backend,
             debug_audit=args.debug_audit,
             obs=args.obs,
-        ))
+        ), mesh=mesh)
         for r in reqs:
             eng.submit(r["prompt"], r["max_new_tokens"],
                        rid=r["rid"], arrival_step=r["arrival_step"])
@@ -205,6 +213,12 @@ def main():
                          "COW kernels (compiled on TPU, interpret mode "
                          "elsewhere; families without paged decode fall "
                          "back to their reference path)")
+    ap.add_argument("--mesh", default="",
+                    help="DxM device mesh (e.g. 1x2): serve tensor-parallel "
+                         "— resident sharded weights, head-sharded KV pools, "
+                         "sharded jitted steps.  Needs D*M visible devices "
+                         "(simulate on CPU with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N); '' serves single-device")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the shared-prefix page cache (radix "
                          "index + refcounted aliasing + copy-on-write); "
@@ -244,11 +258,17 @@ def main():
         msg = A.unsupported_message(cfg, hint="rerun with --engine static")
         if msg is not None:
             raise SystemExit(msg)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+        print(f"serving on mesh {args.mesh}: "
+              f"{mesh.shape['data']} data x {mesh.shape['model']} model")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if args.num_requests > 0:
-        run_workload(cfg, params, args)
+        run_workload(cfg, params, args, mesh=mesh)
     else:
-        run_single_wave(cfg, params, args)
+        run_single_wave(cfg, params, args, mesh=mesh)
 
 
 if __name__ == "__main__":

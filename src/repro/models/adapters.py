@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.backend import resolve_backend
@@ -142,6 +143,22 @@ class CacheAdapter:
         Only meaningful for paged adapters."""
         raise NotImplementedError
 
+    def pool_pspecs(self, cfg: ModelConfig, *, tp_axis: str = "model",
+                    tp_size: int = 1) -> Dict:
+        """PartitionSpec per **L-stacked** pool leaf for tensor-parallel
+        serving (``{pool_name: PartitionSpec}``; missing names replicate).
+
+        Specs describe the engine pools AFTER layer stacking (leading L
+        axis, see :func:`repro.models.model.init_paged_cache`).  Page ids,
+        page tables and free lists are host/replicated state and never
+        appear here.  The base adapter replicates everything — families
+        whose pools carry a kv-head axis override to shard it over the
+        model axis when it divides, which is the mesh-parallel half of the
+        paper's arrangement claim: each core streams only its own heads'
+        pages.
+        """
+        return {}
+
     def chunk_multiple(self, cfg: ModelConfig) -> int:
         """Prefill chunk boundaries must sit on multiples of this."""
         return 1
@@ -192,6 +209,17 @@ class PagedAttnAdapter(CacheAdapter):
             seg_cache, src, dst
         )
 
+    def pool_pspecs(self, cfg, *, tp_axis="model", tp_size=1):
+        # stacked pools are (L, num_pages, page, n_kv_heads, d_head): shard
+        # the kv-head axis so each device holds (and streams) 1/tp of every
+        # page; pages themselves never cross devices.  Query heads arrive
+        # pre-partitioned by the column-parallel wq/wk/wv, so only the
+        # post-attention row-parallel wo all-reduces.
+        if tp_size > 1 and cfg.n_kv_heads % tp_size == 0:
+            head = P(None, None, None, tp_axis, None)
+            return {"k_pages": head, "v_pages": head}
+        return {}
+
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return _install_paged(dst, src, phys_tok, off_tok,
                               {"k": "k_pages", "v": "v_pages"})
@@ -222,6 +250,15 @@ class RingAttnAdapter(CacheAdapter):
     def init_pool(self, cfg, geom):
         return attn.gqa_cache_init(cfg, geom.max_seqs, geom.max_len,
                                    window_only=True)
+
+    def pool_pspecs(self, cfg, *, tp_axis="model", tp_size=1):
+        # stacked rings are (L, max_seqs, slots, n_kv_heads, d_head): the
+        # head axis shards like the paged pools (ring attention is
+        # head-independent); the position labels replicate.
+        if tp_size > 1 and cfg.n_kv_heads % tp_size == 0:
+            head = P(None, None, None, tp_axis, None)
+            return {"k": head, "v": head}
+        return {}
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         slots_e = dst["k"].shape[2]  # engine ring length: min(window, max_len)
@@ -276,6 +313,16 @@ class LatentMLAAdapter(CacheAdapter):
 
     def init_pool(self, cfg, geom):
         return attn.mla_paged_cache_init(cfg, geom.num_pages, geom.page_size)
+
+    def pool_pspecs(self, cfg, *, tp_axis="model", tp_size=1):
+        # MLA latent pools carry NO head axis — the rank-r c_kv and the
+        # shared rotary key are consumed by every query head, so the pages
+        # replicate (they are tiny: r + dr floats per token vs
+        # 2*Hkv*dh).  Head parallelism lives on the activation side: the
+        # absorbed q_lat / q_rope are head-sharded by the column-parallel
+        # wq projections and each device attends its own heads against the
+        # replicated latent pages.
+        return {"ckv_pages": P(), "krope_pages": P()}
 
     def copy_page(self, cfg, seg_cache, src, dst):
         return resolve_backend(cfg.decode_backend).paged_copy_page(
@@ -371,6 +418,15 @@ class CrossAttnAdapter(CacheAdapter):
                 (geom.max_seqs, cfg.encoder_seq, cfg.n_kv_heads, dh), cfg.dtype
             ),
         }
+
+    def pool_pspecs(self, cfg, *, tp_axis="model", tp_size=1):
+        # stacked cross rows are (L, max_seqs, encoder_seq, n_kv_heads,
+        # d_head): immutable per request, head-sharded like the paged pools
+        # so cross-attention reads stay local to each device's heads.
+        if tp_size > 1 and cfg.n_kv_heads % tp_size == 0:
+            head = P(None, None, None, tp_axis, None)
+            return {"k": head, "v": head}
+        return {}
 
     def install(self, cfg, dst, src, slot, phys_tok, off_tok):
         return write_slot_rows(dst, src, slot, axis=1)

@@ -54,6 +54,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.backend import resolve_backend
 from repro.distributed import axes as AX
+from repro.distributed import sharding as SH
 from repro.models import adapters as A
 from repro.models import model as M
 from repro.models.model import frontend_extras  # re-exported for callers
@@ -238,13 +239,22 @@ class Server:
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, mesh=None):
         self.cfg, self.params, self.sc, self.mesh = cfg, params, sc, mesh
         if mesh is not None:
-            with mesh, AX.policy(mesh):
-                self._prefill = jax.jit(
-                    lambda p, b, *a: M.prefill(cfg, p, b, *a)
-                )
-                self._decode = jax.jit(
-                    lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
-                )
+            # resident 2-D TP weights; the step bodies trace under the mesh
+            # (AX.traced_under) so the model's activation constraints see
+            # the policy — a context around jit *construction* would be gone
+            # by (lazy) trace time
+            params_shape = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+            )
+            self.params = jax.device_put(params, SH.named(
+                mesh, SH.param_pspecs(cfg, mesh, params_shape, mode="serve")
+            ))
+            self._prefill = jax.jit(
+                AX.traced_under(mesh, lambda p, b, *a: M.prefill(cfg, p, b, *a))
+            )
+            self._decode = jax.jit(AX.traced_under(
+                mesh, lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+            ))
         else:
             self._prefill = _prefill_fn(cfg)
             self._decode = _decode_fn(cfg)
@@ -418,6 +428,10 @@ class Engine:
         if ec.backend != cfg.decode_backend:
             cfg = dataclasses.replace(cfg, decode_backend=ec.backend)
         self.cfg, self.params, self.ec, self.mesh = cfg, params, ec, mesh
+        if mesh is not None:
+            # fail fast at construction: a model-axis size the kv-head axis
+            # cannot divide would silently replicate every paged pool
+            SH.validate_paged_sharding(cfg, mesh)
         # unsupported families are refused by the PagedKVCache constructor
         # (before any pool is allocated), with the registry's family list
         # recompute families (MoE stacks) rely on prefix chunks replaying
@@ -431,7 +445,7 @@ class Engine:
             max_seqs=ec.max_seqs, max_len=ec.max_len,
             page_size=ec.page_size, num_pages=ec.num_pages,
             prefix_sharing=sharing,
-        ))
+        ), mesh=mesh)
         self.obs = Observability(deep=ec.obs, max_seqs=ec.max_seqs)
         self.sched = Scheduler(self.kv, ec.max_seqs, obs=self.obs)
         self.chunk_size = self._resolve_chunk(ec.prefill_chunk)
@@ -455,17 +469,33 @@ class Engine:
         self._admission_ads = A.admission_adapters(cfg)
 
         if mesh is not None:
-            # per-instance closures: jit must trace under the mesh context
-            with mesh, AX.policy(mesh):
-                self._prefill = jax.jit(functools.partial(M.prefill, cfg))
-                self._chunk_fn = jax.jit(
-                    functools.partial(M.prefill_chunk, cfg),
-                    donate_argnums=_donate_caches(),
-                )
-                self._decode = jax.jit(
-                    functools.partial(_paged_step, cfg),
-                    donate_argnums=_donate_caches(),
-                )
+            # per-instance sharded closures (the sjit idiom): explicit
+            # in/out shardings so pool donation composes with GSPMD
+            # partitioning, bodies traced under the mesh (AX.traced_under)
+            # so activation constraints and the pallas shard_map dispatch
+            # see the policy at trace time.  Small host-fed inputs (tokens,
+            # positions, page tables, scalars) are replicated.
+            param_sh, pool_sh, rep = SH.serve_shardings(
+                cfg, mesh, params, self.kv.data
+            )
+            self.params = jax.device_put(params, param_sh)
+            self._prefill = jax.jit(
+                AX.traced_under(mesh, functools.partial(M.prefill, cfg))
+            )
+            self._chunk_fn = jax.jit(
+                AX.traced_under(mesh, functools.partial(M.prefill_chunk, cfg)),
+                in_shardings=(
+                    param_sh, pool_sh, rep, rep, rep, rep, rep, rep, rep
+                ),
+                out_shardings=(rep, pool_sh),
+                donate_argnums=_donate_caches(),
+            )
+            self._decode = jax.jit(
+                AX.traced_under(mesh, functools.partial(_paged_step, cfg)),
+                in_shardings=(param_sh, pool_sh, rep, rep, rep, rep),
+                out_shardings=(rep, rep, pool_sh),
+                donate_argnums=_donate_caches(),
+            )
         else:
             self._prefill = _prefill_fn(cfg)
             self._chunk_fn = _prefill_chunk_fn(cfg)

@@ -144,6 +144,38 @@ def _cow_fn(cfg: ModelConfig):
     return jax.jit(cow_step(cfg), donate_argnums=POOL_DONATE)
 
 
+def sharded_pool_steps(cfg: ModelConfig, mesh, pool_shardings, replicated):
+    """Mesh-sharded install/COW jits for one engine instance.
+
+    The module-level :func:`_install_fn` / :func:`_cow_fn` are mesh-
+    oblivious (and shared across engines); a mesh-aware cache builds its
+    own pair here, with the pool pytree's NamedShardings pinned on both
+    sides of the donation (the ``sjit`` idiom: ``in_shardings`` +
+    ``out_shardings`` + ``donate_argnums`` compose, so the in-place pool
+    update survives sharding — verified by jaxcheck RPJ101 over the
+    sharded inventory).  The traced bodies run under the mesh/policy
+    context (:func:`repro.distributed.axes.traced_under`): jit traces
+    lazily, so the context must wrap the body, not the jit construction.
+    Install sources and page ids are small host-fed values and replicate.
+    """
+    from repro.distributed import axes as AX
+
+    install = jax.jit(
+        AX.traced_under(mesh, install_step(cfg)),
+        in_shardings=(pool_shardings, replicated, replicated, replicated,
+                      replicated),
+        out_shardings=pool_shardings,
+        donate_argnums=POOL_DONATE,
+    )
+    cow = jax.jit(
+        AX.traced_under(mesh, cow_step(cfg)),
+        in_shardings=(pool_shardings, replicated, replicated),
+        out_shardings=pool_shardings,
+        donate_argnums=POOL_DONATE,
+    )
+    return install, cow
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedCacheConfig:
     """Sizing of the paged cache pool.
@@ -379,7 +411,7 @@ class PrefixIndex:
 class PagedKVCache:
     """Device cache pool + host page tables for the continuous-batching engine."""
 
-    def __init__(self, cfg: ModelConfig, pc: PagedCacheConfig):
+    def __init__(self, cfg: ModelConfig, pc: PagedCacheConfig, mesh=None):
         msg = A.unsupported_message(cfg, hint="use Server for the rest")
         if msg is not None:
             raise NotImplementedError(msg)
@@ -402,6 +434,26 @@ class PagedKVCache:
         self.data = M.init_paged_cache(
             cfg, pc.max_seqs, num_pages, self.page_size, self.max_len
         )
+        # mesh-sharded pools: place every pool leaf per the adapter
+        # registry's PartitionSpecs (head axis over "model" where it
+        # divides) and replace the shared module-level install/COW jits
+        # with per-instance sharded ones — donation + sharding compose
+        self.mesh = mesh
+        self.pool_shardings = None
+        self._install_jit = None
+        self._cow_jit = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.distributed import sharding as SH
+
+            self.pool_shardings = SH.named(
+                mesh, SH.paged_cache_pspecs(cfg, mesh, self.data)
+            )
+            self.data = jax.device_put(self.data, self.pool_shardings)
+            self._install_jit, self._cow_jit = sharded_pool_steps(
+                cfg, mesh, self.pool_shardings,
+                NamedSharding(mesh, PartitionSpec()),
+            )
         # host-side page tables; unmapped entries point at the null page
         self._table = np.zeros((pc.max_seqs, self.max_pages_per_seq), np.int32)
         self._table_dev: Optional[jnp.ndarray] = None
@@ -409,6 +461,17 @@ class PagedKVCache:
         self._cached_tokens: Dict[int, int] = {}  # slot -> aliased prefix len
         self.pages_aliased = 0  # cumulative prefix-page aliases (stats)
         self.cow_copies = 0  # cumulative copy-on-write page copies (stats)
+
+    # -- jitted pool steps ---------------------------------------------------
+
+    def _install_step(self):
+        """The donating install jit: the per-instance sharded one under a
+        mesh, else the module-level memoized single-device one."""
+        return self._install_jit if self._install_jit is not None else _install_fn(self.cfg)
+
+    def _cow_step(self):
+        """The donating COW jit (sharded per-instance under a mesh)."""
+        return self._cow_jit if self._cow_jit is not None else _cow_fn(self.cfg)
 
     # -- accounting ---------------------------------------------------------
 
@@ -566,7 +629,7 @@ class PagedKVCache:
         if got is None:
             return False
         new = got[0]
-        self.data = _cow_fn(self.cfg)(
+        self.data = self._cow_step()(
             self.data, jnp.int32(page), jnp.int32(new)
         )
         self._pages[slot][lp] = new
@@ -627,7 +690,7 @@ class PagedKVCache:
         """
         src_len = self._src_token_count(prefill_caches)
         phys_tok, off_tok = self.token_targets(slot, 0, src_len)
-        self.data = _install_fn(self.cfg)(
+        self.data = self._install_step()(
             self.data, prefill_caches, jnp.int32(slot), phys_tok, off_tok
         )
 
@@ -637,7 +700,7 @@ class PagedKVCache:
         before any prompt chunk runs.  Same donating jit discipline as
         :meth:`install_prefill`."""
         phys_tok, off_tok = self.token_targets(slot, 0, 1)  # unused by rows
-        self.data = _install_fn(self.cfg)(
+        self.data = self._install_step()(
             self.data, src, jnp.int32(slot), phys_tok, off_tok
         )
 
@@ -707,6 +770,20 @@ class PagedKVCache:
 
     def cache_bytes(self) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
+
+    def cache_bytes_per_device(self) -> int:
+        """Upper bound on the pool bytes resident on any ONE device: for
+        each leaf, the largest addressable shard (head-sharded pools divide
+        by the TP factor; replicated leaves count in full).  Equals
+        :meth:`cache_bytes` single-device — the benchmark's mesh gate
+        asserts the ratio matches the sharded families' TP saving."""
+        total = 0
+        for leaf in jax.tree.leaves(self.data):
+            if self.mesh is not None and hasattr(leaf, "addressable_shards"):
+                total += max(s.data.nbytes for s in leaf.addressable_shards)
+            else:
+                total += leaf.size * leaf.dtype.itemsize
+        return total
 
     # -- debug auditor -------------------------------------------------------
 

@@ -22,12 +22,13 @@ from repro.analysis.jaxcheck import (
 from repro.analysis.jaxcheck.harness import (
     ProbeSet,
     StepSpec,
+    collective_stats,
     compile_step,
     gather_stats,
     measure,
     parse_aliased_params,
 )
-from repro.analysis.jaxcheck.inventory import serving_inventory
+from repro.analysis.jaxcheck.inventory import InventoryConfig, serving_inventory
 from repro.analysis.jaxcheck.rules import RULES, run_rules
 
 REPO = Path(__file__).resolve().parent.parent
@@ -326,3 +327,96 @@ def test_engine_inventory_is_clean():
     # and the inventory covers the steps the budgets file gates
     names = {cs.name for cs in steps}
     assert set(budgets.steps) <= names | {"global"}
+
+
+# --------------------------------------------------------------------------
+# RPJ106 — collective-traffic budget
+# --------------------------------------------------------------------------
+
+_SHARDED_HLO = """\
+HloModule jit_step, is_scheduled=true
+
+ENTRY main {
+  %p0 = f32[2,48]{1,0} parameter(0)
+  %all-gather = f32[2,96]{1,0} all-gather(f32[2,48]{1,0} %p0), dimensions={1}
+  %all-reduce-start = f32[2,96]{1,0} all-reduce-start(f32[2,96]{1,0} %all-gather)
+  %all-reduce-done = f32[2,96]{1,0} all-reduce-done(%all-reduce-start)
+  %reduce-scatter = (f32[2,48]{1,0}, f32[4]{0}) reduce-scatter(%all-reduce-done)
+  ROOT %out = f32[2,48]{1,0} get-tuple-element(%reduce-scatter), index=0
+}
+"""
+
+
+def test_collective_stats_parses_hlo_once_per_async_pair():
+    colls = collective_stats(_SHARDED_HLO)
+    # the -done must not double-count its -start; the tuple shape sums
+    assert [c["op"] for c in colls] == [
+        "all-gather", "all-reduce", "reduce-scatter"
+    ]
+    assert [c["output_bytes"] for c in colls] == [
+        2 * 96 * 4, 2 * 96 * 4, 2 * 48 * 4 + 4 * 4
+    ]
+    assert collective_stats("ENTRY main { ROOT %x = f32[4] add(...) }") == []
+
+
+class _FakeArtifact:
+    def __init__(self, hlo):
+        self._hlo = hlo
+
+    def hlo_text(self):
+        return self._hlo
+
+
+class _FakeCompiledStep:
+    def __init__(self, name, hlo):
+        self.name = name
+        self.artifact = _FakeArtifact(hlo)
+
+
+def test_rpj106_seeded_unbudgeted_and_over_budget():
+    cs = _FakeCompiledStep("sharded_step", _SHARDED_HLO)
+    found = RULES["RPJ106"]([cs], None, Budgets())
+    assert found and "no collective_bytes budget" in found[0].message
+    tight = Budgets(steps={"sharded_step": {"collective_bytes": 8}},
+                    tolerance=0.0)
+    found = RULES["RPJ106"]([cs], None, tight)
+    assert found and "exceeds budget" in found[0].message
+
+
+def test_rpj106_clean_within_budget_and_no_collectives():
+    cs = _FakeCompiledStep("sharded_step", _SHARDED_HLO)
+    total = sum(c["output_bytes"] for c in collective_stats(_SHARDED_HLO))
+    ok = Budgets(steps={"sharded_step": {"collective_bytes": total}})
+    assert RULES["RPJ106"]([cs], None, ok) == []
+    # a single-device module (no collectives) passes with no budget at all
+    clean = _FakeCompiledStep("local", "ENTRY main { ROOT %x = f32[4] neg() }")
+    assert RULES["RPJ106"]([clean], None, Budgets()) == []
+
+
+# --------------------------------------------------------------------------
+# sharded inventory (needs simulated devices; CI `mesh` job runs this)
+# --------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_sharded_inventory_donation_and_collectives():
+    """Acceptance gate: on a (1, 2) mesh the engine's compiled sharded
+    steps keep every pool donation aliased (RPJ101 — donation survives
+    sharding), carry real collectives for RPJ106 to budget, and the
+    donated pool's alias bytes drop by the TP factor vs single-device."""
+    inv = serving_inventory(InventoryConfig(mesh="1x2"))
+    steps = [compile_step(spec) for spec in inv.specs]
+    findings = run_rules(steps, inv, Budgets(), select=["RPJ101"])
+    assert not findings, "\n".join(f.format() for f in findings)
+    decode = next(cs for cs in steps if cs.name == "decode_step")
+    assert collective_stats(decode.artifact.hlo_text()), (
+        "sharded decode step should contain cross-device collectives"
+    )
+    single = serving_inventory()
+    dec_spec = next(s for s in single.specs if s.name == "decode_step")
+    alias_single = compile_step(dec_spec).memory["alias_size_in_bytes"]
+    assert decode.memory["alias_size_in_bytes"] * 2 == alias_single
+    # checked-in mesh budgets keep the sharded inventory clean end to end
+    mesh_budgets = REPO / "jaxcheck_mesh.budgets"
+    assert mesh_budgets.exists(), "jaxcheck_mesh.budgets must be checked in"
+    findings = run_rules(steps, inv, load_budgets(mesh_budgets))
+    assert not findings, "\n".join(f.format() for f in findings)

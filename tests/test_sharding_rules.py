@@ -100,6 +100,48 @@ def test_serve_mode_uses_all_axes_for_110b():
     assert found
 
 
+@pytest.mark.parametrize("arch", C.arch_ids())
+@pytest.mark.parametrize("tp", [2, 4, 8])
+def test_paged_cache_pool_specs_valid(arch, tp):
+    """Every cache family's pool specs stay valid on 2/4/8-way model axes:
+    sharded axes divide the pool shapes (the adapter emits head sharding
+    only when the kv-head axis divides), page tables never enter the tree,
+    and the divisibility invariant holds for the L-stacked pool layout."""
+    import jax.numpy as jnp
+
+    from repro.models import adapters as A
+
+    cfg = C.get_config(arch, smoke=True, dtype=jnp.float32)
+    if A.unsupported_message(cfg) is not None:
+        pytest.skip("family is Server-only (no paged pools)")
+    mesh = abstract_mesh((1, tp), ("data", "model"))
+    pools = jax.eval_shape(lambda: M.init_paged_cache(cfg, 2, 5, 8, 32))
+    specs = SH.paged_cache_pspecs(cfg, mesh, pools)
+    _check_spec_tree(mesh, pools, specs)
+    # when the kv-head axis divides, paged K/V pools must actually shard
+    if cfg.n_kv_heads and cfg.n_kv_heads % tp == 0 and any(
+        isinstance(ad, A.PagedAttnAdapter) for ad in A.all_adapters(cfg)
+    ):
+        flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert any("model" in tuple(s) for s in flat), specs
+
+
+@pytest.mark.parametrize("tp", [4, 8])
+def test_paged_sharding_validation_rejects_nondividing(tp):
+    """Construction-time rejection: paged kv-heads that cannot divide the
+    model axis raise with the valid TP sizes named (no silent replication)."""
+    import jax.numpy as jnp
+
+    cfg = C.get_config("minicpm-2b", smoke=True, dtype=jnp.float32)  # hkv=6
+    mesh = abstract_mesh((1, tp), ("data", "model"))
+    with pytest.raises(ValueError, match="n_kv_heads=6"):
+        SH.validate_paged_sharding(cfg, mesh)
+    # 2-way divides; MLA (no paged head axis) passes at any size
+    SH.validate_paged_sharding(cfg, abstract_mesh((1, 2), ("data", "model")))
+    mla = C.get_config("deepseek-v3-671b", smoke=True, dtype=jnp.float32)
+    SH.validate_paged_sharding(mla, mesh)
+
+
 def test_zero_extension_shards_moments_512_ways():
     cfg = C.get_config("deepseek-v3-671b")
     mesh = MESHES["multi"]

@@ -379,6 +379,58 @@ def test_rpr006_pragma_suppression():
 
 
 # --------------------------------------------------------------------------
+# RPR007 — hard-coded device selection in serve/
+# --------------------------------------------------------------------------
+
+_SERVE_PATH = "src/repro/serve/fake.py"
+
+
+def test_rpr007_positive_device_index_and_bare_device_put():
+    src = """
+        import jax
+
+        def place(params, pool):
+            dev = jax.devices()[0]
+            other = jax.local_devices()[1]
+            params = jax.device_put(params)
+            return dev, other, params
+    """
+    assert _rules(src, path=_SERVE_PATH, select=["RPR007"]) == ["RPR007"] * 3
+
+
+def test_rpr007_negative_sharded_device_put():
+    src = """
+        import jax
+
+        def place(params, param_sh, pool, pool_sh):
+            params = jax.device_put(params, param_sh)
+            pool = jax.device_put(pool, device=pool_sh)
+            n = len(jax.devices())
+            return params, pool, n
+    """
+    assert _rules(src, path=_SERVE_PATH, select=["RPR007"]) == []
+
+
+def test_rpr007_negative_outside_serve_tree():
+    src = """
+        import jax
+        dev = jax.devices()[0]
+    """
+    assert _rules(src, path="src/repro/launch/fake.py", select=["RPR007"]) == []
+    assert _rules(src, path="tests/serve/fake.py", select=["RPR007"]) == []
+
+
+def test_rpr007_noqa():
+    src = """
+        import jax
+
+        def place(x):
+            return jax.device_put(x)  # repro: noqa RPR007 -- host staging
+    """
+    assert _rules(src, path=_SERVE_PATH, select=["RPR007"]) == []
+
+
+# --------------------------------------------------------------------------
 # CLI --format json
 # --------------------------------------------------------------------------
 
